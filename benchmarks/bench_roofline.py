@@ -1,0 +1,60 @@
+"""Roofline table: reads the dry-run JSON records (launch/dryrun.py must
+have run) and prints the per-(arch x shape x mesh) three-term analysis."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "../experiments/dryrun")
+
+
+def load_records(tag=""):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(OUT_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("tag", "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run():
+    rows = []
+    for r in load_records():
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh'] if 'mesh' in r else ''}"
+        if r.get("error"):
+            rows.append({"name": name, "us_per_call": -1.0,
+                         "derived": {"error": r["error"][:120]}})
+            continue
+        if r.get("skipped"):
+            rows.append({"name": name, "us_per_call": 0.0,
+                         "derived": {"skipped": r["skipped"][:80]}})
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "name": name,
+            "us_per_call": rf["step_lower_bound_s"] * 1e6,
+            "derived": {
+                "bound": rf["bound"],
+                "compute_s": round(rf["compute_s"], 4),
+                "memory_s": round(rf["memory_s"], 4),
+                "collective_s": round(rf["collective_s"], 4),
+                "roofline_fraction": round(rf["roofline_fraction"], 4),
+                "useful_flops_ratio": round(rf.get("useful_flops_ratio", 0), 3),
+            },
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    if not rows:
+        print("roofline_no_dryrun_records,0.0,{'hint': 'run python -m repro.launch.dryrun --all first'}")
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Sections:
+  fig7   per-model GNN inference latency (engine vs dense-SpMM, stream vs batch)
+  fig8   large-graph DGN (Cora/CiteSeer/PubMed sizes)
+  fig9   NE/MP pipelining speed-ups (sweep + MolHIV + virtual node)
+  table4 per-model resource footprint (params/FLOPs/bytes/VMEM tiles)
+  roofline  per-(arch x shape x mesh) dry-run roofline terms
+"""
+import sys
+
+
+def main() -> None:
+    sections = sys.argv[1:] or ["fig9", "table4", "fig8", "fig7", "roofline"]
+    from benchmarks import (
+        bench_fig7_latency,
+        bench_fig8_large_graph,
+        bench_fig9_pipeline,
+        bench_roofline,
+        bench_table4_resources,
+    )
+
+    mods = {
+        "fig7": bench_fig7_latency,
+        "fig8": bench_fig8_large_graph,
+        "fig9": bench_fig9_pipeline,
+        "table4": bench_table4_resources,
+        "roofline": bench_roofline,
+    }
+    for s in sections:
+        print(f"# --- {s} ---", flush=True)
+        mods[s].main()
+
+
+if __name__ == '__main__':
+    main()

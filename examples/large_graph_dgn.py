@@ -1,0 +1,40 @@
+"""Large Graph Extension (paper §4.6 / Fig. 8): DGN node classification on
+a PubMed-sized graph that exceeds any single on-chip buffer, streamed
+through the tiled message-passing core.
+
+  PYTHONPATH=src python examples/large_graph_dgn.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import from_numpy
+from repro.gnn import apply, init, paper_config
+
+
+def main():
+    n, e, f = 19717, 88648, 500  # PubMed (Table 5)
+    rng = np.random.default_rng(0)
+    s = rng.integers(0, n, e).astype(np.int32)
+    r = rng.integers(0, n, e).astype(np.int32)
+    nf = (rng.random((n, f)) < 0.01).astype(np.float32)
+    cfg = paper_config("dgn", feat_dim=f, task="node", out_dim=3, edge_dim=1)
+    params = init(jax.random.PRNGKey(0), cfg)
+    g = from_numpy(s, r, nf, None, n_pad=-(-n // 128) * 128, e_pad=-(-e // 128) * 128)
+    eig = jnp.asarray(rng.normal(size=(g.num_nodes,)), jnp.float32)
+
+    fn = jax.jit(lambda p, gg, ee: apply(p, gg, cfg, eigvec=ee))
+    out = fn(params, g, eig)
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(params, g, eig))
+    dt = time.perf_counter() - t0
+    print(f"PubMed-sized DGN: {n} nodes, {e} edges, feat {f}")
+    print(f"forward {dt*1e3:.1f} ms ({dt/n*1e6:.2f} us/node); output {out.shape}, "
+          f"NaNs: {bool(jnp.isnan(out).any())}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""End-to-end serving driver (the paper's real-time scenario): a stream of
+raw COO molecule graphs is classified one by one — batch size 1, zero
+preprocessing, on-device COO->CSC conversion inside the compiled step —
+and latency percentiles are reported, plus the batched-mode comparison.
+
+  PYTHONPATH=src python examples/serve_realtime_stream.py [n_graphs]
+"""
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.gengnn_models import get_gnn_config
+from repro.data.pipeline import MOLHIV, MoleculeStream
+from repro.gnn import init
+from repro.serve.gnn_engine import GNNEngine
+
+
+def main():
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 64
+    cfg = get_gnn_config("gin_vn")  # GIN + virtual node, paper §4.5
+    params = init(jax.random.PRNGKey(0), cfg)
+    engine = GNNEngine(cfg, params)
+    stream = MoleculeStream(MOLHIV, seed=0)
+
+    graphs = stream.take(n)
+    t0 = time.perf_counter()
+    outs, lats, compile_s = engine.infer_stream([g[:4] for g in graphs])
+    wall = time.perf_counter() - t0
+    # simple correctness proxy: the synthetic label is linearly separable
+    preds = np.array([float(o[0, 0]) > 0 for o in outs])
+    labels = np.array([bool(g[4]) for g in graphs])
+    print(f"streamed {n} graphs in {wall:.2f}s ({compile_s:.1f}s compile, excluded from latency)")
+    print(f"latency us: mean {np.mean(lats)*1e6:.0f}  p50 {np.percentile(lats,50)*1e6:.0f}  "
+          f"p99 {np.percentile(lats,99)*1e6:.0f}")
+    print(f"untrained-model label agreement (chance ~0.5): {np.mean(preds == labels):.2f}")
+
+    outs_b, per_graph = engine.infer_batched(graphs, batch_size=8,
+                                             n_pad=8 * 64, e_pad=8 * 192)
+    print(f"batched mode: {per_graph*1e6:.0f} us/graph "
+          f"({np.mean(lats)/per_graph:.1f}x throughput vs stream)")
+
+
+if __name__ == "__main__":
+    main()

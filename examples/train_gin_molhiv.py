@@ -1,0 +1,66 @@
+"""Train GIN end-to-end on a synthetic MolHIV-statistics stream for a few
+hundred steps (binary graph classification, BCE loss, AdamW) with
+checkpoints — the training-driver example.
+
+  PYTHONPATH=src python examples/train_gin_molhiv.py [steps]
+"""
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.gengnn_models import get_gnn_config
+from repro.core.graph import batch_graphs
+from repro.data.pipeline import MOLHIV, MoleculeStream
+from repro.gnn import apply, init
+from repro.checkpoint.manager import CheckpointManager
+from repro.optim import adamw
+
+
+def make_batch(stream, rng, step, batch=16):
+    gs, labels = [], []
+    for i in range(batch):
+        s, r, nf, ef, y = stream.graph_at(step * batch + i)
+        gs.append((s, r, nf, ef))
+        labels.append(y)
+    g = batch_graphs(gs, n_pad=batch * 64, e_pad=batch * 192)
+    return g, jnp.asarray(labels)
+
+
+def main():
+    steps = int(sys.argv[1]) if len(sys.argv) > 1 else 200
+    cfg = get_gnn_config("gin")
+    params = init(jax.random.PRNGKey(0), cfg)
+    stream = MoleculeStream(MOLHIV, seed=0)
+    opt_cfg = adamw.AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=steps,
+                                weight_decay=0.01)
+    opt = adamw.init(params)
+
+    def loss_fn(p, g, y):
+        logits = apply(p, g, cfg)[: y.shape[0], 0]
+        return jnp.mean(jnp.maximum(logits, 0) - logits * y +
+                        jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+    @jax.jit
+    def step_fn(p, o, g, y):
+        loss, grads = jax.value_and_grad(loss_fn)(p, g, y)
+        p, o, m = adamw.update(opt_cfg, grads, o, p)
+        acc = jnp.mean(((apply(p, g, cfg)[: y.shape[0], 0] > 0)) == (y > 0.5))
+        return p, o, loss, acc
+
+    rng = np.random.default_rng(0)
+    ckpt = CheckpointManager(tempfile.mkdtemp(prefix="gin_ckpt_"), keep=2)
+    for step in range(steps):
+        g, y = make_batch(stream, rng, step)
+        params, opt, loss, acc = step_fn(params, opt, g, y)
+        if step % max(steps // 10, 1) == 0 or step == steps - 1:
+            print(f"step {step:4d}  bce {float(loss):.4f}  acc {float(acc):.2f}", flush=True)
+        if step == steps - 1:
+            ckpt.save(step, {"params": params}, blocking=True)
+    print("final checkpoint at:", ckpt.dir)
+
+
+if __name__ == "__main__":
+    main()

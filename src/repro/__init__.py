@@ -1,0 +1,7 @@
+"""repro: GenGNN (generic GNN acceleration framework) reproduced on TPU/JAX,
+plus the multi-pod LM substrate for the assigned architecture pool.
+
+Layers (bottom-up): kernels (Pallas) -> core (message passing) -> gnn /
+models -> sharding / optim / checkpoint / data -> train / serve -> launch.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""Atomic async checkpointing with elastic (re-mesh) restore."""
+from repro.checkpoint.manager import CheckpointManager

@@ -1,0 +1,29 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the full published configuration;
+``get_reduced(arch_id)`` returns the same-family smoke-test reduction.
+"""
+from importlib import import_module
+
+REGISTRY = {
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "whisper-base": "repro.configs.whisper_base",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+}
+
+ARCHS = tuple(REGISTRY)
+
+
+def get_config(arch: str, **kw):
+    return import_module(REGISTRY[arch]).get_config(**kw)
+
+
+def get_reduced(arch: str, **kw):
+    return import_module(REGISTRY[arch]).reduced_config(**kw)

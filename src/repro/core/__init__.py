@@ -1,0 +1,51 @@
+"""GenGNN core: graph representation, scatter-gather, message passing.
+
+The paper's primary contribution as composable JAX modules.
+"""
+from repro.core.graph import (
+    Graph,
+    CSRGraph,
+    coo_to_compressed,
+    from_numpy,
+    batch_graphs,
+    in_degree,
+    out_degree,
+)
+from repro.core.message_passing import (
+    mp_layer,
+    gather_scatter,
+    global_pool,
+    pna_aggregate,
+    pna_scalers,
+    AGGREGATORS,
+)
+from repro.core.scatter_gather import (
+    segment_reduce,
+    sorted_segment_reduce,
+    sort_by_segment,
+    rank_within_segment,
+    dispatch_to_slots,
+    combine_from_slots,
+)
+
+__all__ = [
+    "Graph",
+    "CSRGraph",
+    "coo_to_compressed",
+    "from_numpy",
+    "batch_graphs",
+    "in_degree",
+    "out_degree",
+    "mp_layer",
+    "gather_scatter",
+    "global_pool",
+    "pna_aggregate",
+    "pna_scalers",
+    "AGGREGATORS",
+    "segment_reduce",
+    "sorted_segment_reduce",
+    "sort_by_segment",
+    "rank_within_segment",
+    "dispatch_to_slots",
+    "combine_from_slots",
+]

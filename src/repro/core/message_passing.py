@@ -1,0 +1,121 @@
+"""Generic message-passing layer (paper §3.3, Fig. 2/3).
+
+    x_i^{l+1} = gamma( x_i^l , A_{j in N(i)} ( phi(x_j^l, e_ij^l) ) )
+
+The framework fixes the *dataflow* (gather messages along in-edges, reduce
+per destination, transform per node) and models plug in:
+
+  * ``phi``      message transformation, applied edge-parallel,
+  * ``aggregate``one or more permutation-invariant reductions,
+  * ``gamma``    node transformation (the "Node Embedding PE").
+
+GenGNN's merged scatter-gather is realized by ``sorted_segment_reduce``:
+messages fold into the O(N) destination buffer immediately, in sorted-edge
+order — permutation invariance makes the order irrelevant (§3.4).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scatter_gather as sg
+from repro.core.graph import Graph, in_degree
+
+# phi(x_src, x_dst, e) -> message  (edge-parallel)
+PhiFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+# gamma(x, aggregated) -> new x    (node-parallel)
+GammaFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+AGGREGATORS = ("sum", "mean", "max", "min", "std", "var")
+
+
+def gather_scatter(
+    graph: Graph,
+    messages: jax.Array,
+    ops: Sequence[str] = ("sum",),
+    use_sorted: bool = True,
+) -> jax.Array:
+    """Reduce edge messages into per-destination aggregates.
+
+    messages: (E_pad, F) — already masked for padding edges by the caller
+    (or rely on padding edges pointing at the sink node).
+    Returns (N_pad, len(ops) * F) with aggregates concatenated feature-wise
+    (PNA-style multi-aggregator layout).
+    """
+    msg = jnp.where(graph.edge_mask[:, None], messages, 0.0)
+    dst = jnp.where(graph.edge_mask, graph.dst, graph.num_nodes)
+    outs = []
+    for op in ops:
+        if use_sorted:
+            outs.append(sg.sorted_segment_reduce(msg, dst, graph.num_nodes, op))
+        else:
+            outs.append(sg.segment_reduce(msg, dst, graph.num_nodes, op))
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
+
+
+def mp_layer(
+    graph: Graph,
+    x: jax.Array,
+    phi: PhiFn,
+    gamma: GammaFn,
+    ops: Sequence[str] = ("sum",),
+    edge_feat: jax.Array | None = None,
+) -> jax.Array:
+    """One full message-passing layer: scatter(phi) -> A -> gamma.
+
+    ``x``: (N_pad, F) current node embeddings.  Returns (N_pad, F').
+    """
+    e = graph.edge_feat if edge_feat is None else edge_feat
+    x_src = jnp.take(x, graph.src, axis=0)
+    x_dst = jnp.take(x, graph.dst, axis=0)
+    messages = phi(x_src, x_dst, e)
+    agg = gather_scatter(graph, messages, ops=ops)
+    out = gamma(x, agg)
+    return jnp.where(graph.node_mask[:, None], out, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# PNA degree scalers (paper §4.3)
+# ---------------------------------------------------------------------------
+
+
+def pna_scalers(graph: Graph, avg_degree: float) -> jax.Array:
+    """(N_pad, 3) scaler matrix [1, amplification, attenuation] of [21].
+
+    ``avg_degree`` is the mean degree seen in training data (a model
+    hyperparameter, not graph preprocessing).
+    """
+    deg = in_degree(graph).astype(jnp.float32)
+    logd = jnp.log(deg + 1.0)
+    log_davg = jnp.log(jnp.asarray(avg_degree) + 1.0)
+    amp = logd / log_davg
+    att = log_davg / jnp.maximum(logd, 1e-6)
+    att = jnp.where(deg > 0, att, 0.0)
+    return jnp.stack([jnp.ones_like(logd), amp, att], axis=-1)
+
+
+def pna_aggregate(graph: Graph, messages: jax.Array, avg_degree: float) -> jax.Array:
+    """Full PNA tower: 4 aggregators x 3 scalers -> (N_pad, 12*F)."""
+    agg = gather_scatter(graph, messages, ops=("mean", "std", "max", "min"))
+    n, f4 = agg.shape
+    scalers = pna_scalers(graph, avg_degree)  # (N, 3)
+    out = agg[:, None, :] * scalers[:, :, None]  # (N, 3, 4F)
+    return out.reshape(n, 3 * f4)
+
+
+# ---------------------------------------------------------------------------
+# Global graph pooling (graph-level tasks, paper §3.3)
+# ---------------------------------------------------------------------------
+
+
+def global_pool(graph: Graph, x: jax.Array, op: str = "mean") -> jax.Array:
+    """Pool node embeddings per graph id -> (n_graph_pad, F).
+
+    Uses the same segment machinery; graphs in a padded batch are segments.
+    """
+    max_graphs = graph.num_nodes  # safe upper bound; callers slice
+    gid = jnp.where(graph.node_mask, graph.graph_id, max_graphs)
+    xm = jnp.where(graph.node_mask[:, None], x, 0.0)
+    return sg.segment_reduce(xm, gid, max_graphs, op)

@@ -1,0 +1,163 @@
+"""Sort-based segment scatter-gather — the heart of GenGNN's merged MP step.
+
+The paper merges the scatter and gather phases (§3.4): as each message is
+produced it is immediately folded into the receiver's partial aggregate, so
+the message buffer is O(N), never O(E).  The merge is legal because the
+aggregation A(.) is permutation invariant.
+
+On TPU, per-edge random scatter serializes on the VPU, so the same insight
+is expressed as: *sort edges by destination once (on device), then reduce
+contiguous segments*.  The segment layout is exactly the paper's CSC/CSR
+ordering, and the O(N) buffer is the segment-reduction output.
+
+These primitives are reused by three subsystems (see DESIGN.md §3):
+the GNN engine, MoE token routing, and distributed large-graph exchange.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+_POS = 1e30
+
+REDUCTIONS = ("sum", "mean", "max", "min", "var", "std", "sqsum")
+
+
+def segment_reduce(
+    values: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    op: str = "sum",
+    indices_are_sorted: bool = False,
+) -> jax.Array:
+    """Permutation-invariant segment reduction (the A(.) of §3.3).
+
+    values: (E, F); segment_ids: (E,) int; returns (num_segments, F).
+    Empty segments yield 0 for every op (matching an FPGA accumulator that
+    was never written).
+    """
+    if op not in REDUCTIONS:
+        raise ValueError(f"unknown reduction {op!r}; expected one of {REDUCTIONS}")
+    kw = dict(num_segments=num_segments, indices_are_sorted=indices_are_sorted)
+    if op == "sum":
+        return jax.ops.segment_sum(values, segment_ids, **kw)
+    if op == "sqsum":
+        return jax.ops.segment_sum(values * values, segment_ids, **kw)
+    count = jax.ops.segment_sum(jnp.ones_like(values[..., :1]), segment_ids, **kw)
+    if op == "mean":
+        total = jax.ops.segment_sum(values, segment_ids, **kw)
+        return total / jnp.maximum(count, 1.0)
+    if op in ("var", "std"):
+        total = jax.ops.segment_sum(values, segment_ids, **kw)
+        sq = jax.ops.segment_sum(values * values, segment_ids, **kw)
+        c = jnp.maximum(count, 1.0)
+        mean = total / c
+        var = jnp.maximum(sq / c - mean * mean, 0.0)
+        return jnp.sqrt(var) if op == "std" else var
+    # max / min: mask empty segments back to 0.
+    if op == "max":
+        red = jax.ops.segment_max(values, segment_ids, **kw)
+        red = jnp.where(jnp.isfinite(red), red, 0.0)
+    else:
+        red = jax.ops.segment_min(values, segment_ids, **kw)
+        red = jnp.where(jnp.isfinite(red), red, 0.0)
+    return jnp.where(count > 0, red, 0.0)
+
+
+def sort_by_segment(
+    segment_ids: jax.Array, num_segments: int, valid: jax.Array | None = None
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Stable sort key establishing segment locality (on-device, O(E log E)).
+
+    Returns (perm, ids_sorted, offsets) where offsets is (num_segments+1,).
+    Invalid entries sort to the end with id == num_segments.
+    """
+    ids = segment_ids if valid is None else jnp.where(valid, segment_ids, num_segments)
+    perm = jnp.argsort(ids, stable=True).astype(jnp.int32)
+    ids_sorted = jnp.take(ids, perm)
+    probe = jnp.arange(num_segments + 1, dtype=ids_sorted.dtype)
+    offsets = jnp.searchsorted(ids_sorted, probe, side="left").astype(jnp.int32)
+    return perm, ids_sorted, offsets
+
+
+def rank_within_segment(segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    """Position of each element within its segment (0-based), via stable sort.
+
+    This is the capacity-slot assignment used by MoE dispatch: element e with
+    ``rank r`` in segment s lands in slot (s, r).  O(E log E + E) and fully
+    on-device — no host preprocessing, per the paper's real-time constraint.
+    """
+    e = segment_ids.shape[0]
+    perm, _, offsets = sort_by_segment(segment_ids, num_segments)
+    # index within the sorted run = sorted position - segment start
+    seg_start = jnp.take(offsets, jnp.take(jnp.clip(segment_ids, 0, num_segments), perm))
+    rank_sorted = jnp.arange(e, dtype=jnp.int32) - seg_start
+    # scatter ranks back to original order
+    rank = jnp.zeros((e,), jnp.int32).at[perm].set(rank_sorted)
+    return rank
+
+
+def dispatch_to_slots(
+    values: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    capacity: int,
+    valid: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Gather ``values`` into a dense (num_segments, capacity, F) slot array.
+
+    The bipartite message-passing primitive: element -> segment with bounded
+    fan-in.  Elements beyond ``capacity`` in their segment are dropped (their
+    ``kept`` flag is False) — the standard GShard/Switch semantics, and the
+    analogue of a bounded FPGA FIFO.
+
+    Returns (slots, slot_index, kept):
+      slots:      (num_segments, capacity, F)
+      slot_index: (E,) int32 flattened destination slot (capacity*seg + rank)
+      kept:       (E,) bool
+    """
+    e, f = values.shape
+    ids = segment_ids if valid is None else jnp.where(valid, segment_ids, num_segments)
+    rank = rank_within_segment(ids, num_segments)
+    kept = (rank < capacity) & (ids < num_segments)
+    slot = jnp.where(kept, ids * capacity + rank, num_segments * capacity)
+    slots = jnp.zeros((num_segments * capacity + 1, f), values.dtype)
+    slots = slots.at[slot].set(values)  # unique slots -> no collisions
+    return slots[:-1].reshape(num_segments, capacity, f), slot.astype(jnp.int32), kept
+
+
+def combine_from_slots(
+    slots: jax.Array, slot_index: jax.Array, kept: jax.Array
+) -> jax.Array:
+    """Inverse of :func:`dispatch_to_slots`: gather each element's slot row.
+
+    Dropped elements receive zeros (identity under sum-combine).
+    """
+    num_segments, capacity, f = slots.shape
+    flat = slots.reshape(num_segments * capacity, f)
+    safe = jnp.minimum(slot_index, num_segments * capacity - 1)
+    out = jnp.take(flat, safe, axis=0)
+    return jnp.where(kept[:, None], out, 0.0)
+
+
+@partial(jax.jit, static_argnames=("num_segments", "op"))
+def sorted_segment_reduce(
+    values: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    op: str = "sum",
+) -> jax.Array:
+    """segment_reduce after an explicit on-device sort (CSR/CSC layout).
+
+    Functionally identical to :func:`segment_reduce`; exists so the engine
+    can share one sort across many layers (the paper converts COO once and
+    reuses it for all layers) and so the Pallas kernel — which requires
+    sorted segments for block locality — drops in transparently.
+    """
+    perm, ids_sorted, _ = sort_by_segment(segment_ids, num_segments)
+    vals_sorted = jnp.take(values, perm, axis=0)
+    return segment_reduce(vals_sorted, ids_sorted, num_segments, op, indices_are_sorted=True)

@@ -1,0 +1,5 @@
+"""Deterministic synthetic + binary data pipelines (tokens, molecules)."""
+from repro.data.pipeline import (
+    SyntheticTokens, BinTokenDataset, TokenPipelineConfig,
+    MoleculeStream, MOLHIV, MOLPCBA, write_synthetic_corpus,
+)

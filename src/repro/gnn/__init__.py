@@ -1,0 +1,5 @@
+"""Model-specific component library (paper §4): GCN, GIN(+VN), GAT, PNA, DGN."""
+from repro.gnn.models import GNNConfig, paper_config, init, apply
+from repro.gnn.reference import apply_dense
+
+__all__ = ["GNNConfig", "paper_config", "init", "apply", "apply_dense"]

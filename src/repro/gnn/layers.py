@@ -1,0 +1,55 @@
+"""Shared building blocks for the GNN model library (the paper's 'rich
+library of model-specific components', §4).
+
+Parameters are plain nested dicts of jnp arrays (pytree-native).  Every
+dense transform routes through ``kernels.ops.node_mlp`` so the NE PE
+kernel/reference dispatch is uniform across models.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def glorot(rng, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return jax.random.normal(rng, shape, dtype) * scale
+
+
+def linear_init(rng, d_in: int, d_out: int) -> dict:
+    kw, _ = jax.random.split(rng)
+    return {"w": glorot(kw, (d_in, d_out)), "b": jnp.zeros((d_out,))}
+
+
+def linear_apply(p: dict, x: jax.Array, activation: str = "none", mode: str = "auto"):
+    return ops.node_mlp(x, p["w"], p["b"], activation=activation, mode=mode)
+
+
+def mlp_init(rng, sizes: Sequence[int]) -> list:
+    """sizes = (d_in, h1, ..., d_out)."""
+    keys = jax.random.split(rng, len(sizes) - 1)
+    return [linear_init(k, a, b) for k, a, b in zip(keys, sizes[:-1], sizes[1:])]
+
+
+def mlp_apply(ps: list, x: jax.Array, activation: str = "relu", mode: str = "auto",
+              final_activation: str = "none"):
+    """The paper's MLP PE: pipelined linear->act chain with fused tails."""
+    for i, p in enumerate(ps):
+        act = activation if i < len(ps) - 1 else final_activation
+        x = linear_apply(p, x, activation=act, mode=mode)
+    return x
+
+
+def batch_norm_init(dim: int) -> dict:
+    """Inference-mode batch norm (folded scale/shift), as the HLS code bakes
+    trained BN constants into the bitstream."""
+    return {"scale": jnp.ones((dim,)), "shift": jnp.zeros((dim,))}
+
+
+def batch_norm_apply(p: dict, x: jax.Array) -> jax.Array:
+    return x * p["scale"] + p["shift"]

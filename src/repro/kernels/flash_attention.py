@@ -1,0 +1,151 @@
+"""Pallas TPU blockwise (flash) attention for the LM substrate.
+
+Online-softmax attention with q/kv tiling so the (S, S) score matrix is
+never materialized in HBM — the working set per grid cell is
+(TQ, D) + (TK, D) + (TQ, TK), sized for VMEM, MXU-aligned.
+
+Supports causal masking, GQA (Hq % Hkv == 0, the kv head is selected by
+the BlockSpec index map so no repeated kv materialization), and sliding
+windows (Mistral/Gemma-local layers).  The causal/window structure prunes
+whole kv blocks via ``pl.when`` (compute skip) — on real hardware the
+block would also be skipped at the DMA level with a scalar-prefetch grid.
+
+The dry-run/costing path uses the pure-jnp chunked equivalent in
+models/attention.py for clean HLO; this kernel is the TPU deployment path,
+validated against kernels/ref.py in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, window: int | None, block_q: int, block_k: int, n_k: int,
+):
+    """Grid = (batch*heads, q_blocks, k_blocks); k innermost (sequential)."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # block-level pruning: causal => skip blocks strictly above the diagonal;
+    # window => skip blocks entirely left of the window.
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        needed = jnp.logical_and(needed, k_start + block_k > q_start - window + 1)
+
+    @pl.when(needed)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)  # (TQ, D)
+        k = k_ref[0].astype(jnp.float32)  # (TK, D)
+        v = v_ref[0].astype(jnp.float32)  # (TK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (TQ, TK)
+        qpos = q_start + jax.lax.iota(jnp.int32, block_q)[:, None]
+        kpos = k_start + jax.lax.iota(jnp.int32, block_k)[None, :]
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_ref[...]  # (TQ, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D).  Returns (B, Hq, S, D).
+
+    S must be a multiple of the block sizes (the LM substrate pads seq);
+    D should be a multiple of 128 for MXU alignment (64 tolerated).
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale = 1.0 / (d**0.5)
+    qf = q.reshape(b * hq, s, d)
+    kf = k.reshape(b * hkv, s, d)
+    vf = v.reshape(b * hkv, s, d)
+    n_q = s // block_q
+    n_k = s // block_k
+    grid = (b * hq, n_q, n_k)
+
+    def q_map(h, i, j):
+        return (h, i, 0)
+
+    def kv_map(h, i, j):
+        # GQA: query head h -> kv head (h % hq) // g within its batch
+        bidx = h // hq
+        kvh = (h % hq) // g
+        return (bidx * hkv + kvh, j, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=scale,
+            causal=causal,
+            window=window,
+            block_q=block_q,
+            block_k=block_k,
+            n_k=n_k,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, s, d)

@@ -1,0 +1,108 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Dispatch policy: on TPU backends the compiled kernels run natively; on CPU
+(this container) they execute in interpret mode when explicitly requested
+(tests/benchmarks) and otherwise fall back to the pure-jnp reference path,
+which lowers to identical-semantics XLA ops — so the rest of the framework
+is backend-agnostic.  ``mode``:
+
+  * "auto":      kernel on TPU, reference elsewhere
+  * "kernel":    force Pallas (interpret=True off-TPU)
+  * "reference": force pure-jnp oracle
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.edge_softmax import edge_softmax as _edge_softmax_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.node_mlp import node_mlp as _node_mlp_kernel
+from repro.kernels.segment_reduce import segment_reduce_sorted as _segment_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(mode: str):
+    """-> (use_kernel, interpret)"""
+    if mode == "reference":
+        return False, False
+    if mode == "kernel":
+        return True, not _on_tpu()
+    return (True, False) if _on_tpu() else (False, False)
+
+
+def segment_reduce(
+    values: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    op: str = "sum",
+    mode: str = "auto",
+) -> jax.Array:
+    """Sorted-segment reduction (MP PE). values (E,F), ids sorted."""
+    use_kernel, interpret = _resolve(mode)
+    if not use_kernel:
+        return ref.segment_reduce_sorted_ref(values, segment_ids, num_segments, op)
+    if op == "mean":
+        total = _segment_kernel(values, segment_ids, num_segments, "sum", interpret=interpret)
+        ones = jnp.ones((values.shape[0], 1), values.dtype)
+        count = _segment_kernel(ones, segment_ids, num_segments, "sum", interpret=interpret)
+        return (total / jnp.maximum(count, 1.0)).astype(values.dtype)
+    out = _segment_kernel(values, segment_ids, num_segments, op, interpret=interpret)
+    if op in ("max", "min"):
+        ones = jnp.ones((values.shape[0], 1), values.dtype)
+        count = _segment_kernel(ones, segment_ids, num_segments, "sum", interpret=interpret)
+        out = jnp.where(count > 0, out, 0.0)
+    return out.astype(values.dtype)
+
+
+def node_mlp(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str = "relu",
+    mode: str = "auto",
+) -> jax.Array:
+    """Fused linear+bias+activation (NE PE)."""
+    use_kernel, interpret = _resolve(mode)
+    if not use_kernel:
+        return ref.node_mlp_ref(x, w, b, activation)
+    return _node_mlp_kernel(x, w, b, activation, interpret=interpret)
+
+
+def edge_softmax(
+    logits: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    mode: str = "auto",
+) -> jax.Array:
+    """Per-destination softmax over sorted edges (GAT)."""
+    use_kernel, interpret = _resolve(mode)
+    if not use_kernel:
+        return ref.edge_softmax_ref(logits, segment_ids, num_segments)
+    return _edge_softmax_kernel(logits, segment_ids, num_segments, interpret=interpret)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    mode: str = "auto",
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Blockwise GQA attention."""
+    use_kernel, interpret = _resolve(mode)
+    if not use_kernel:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash_kernel(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )

@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` function defines the exact semantics its kernel must match;
+tests sweep shapes/dtypes and assert allclose(kernel(interpret=True), ref).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_reduce_sorted_ref(
+    values: jax.Array, segment_ids: jax.Array, num_segments: int, op: str = "sum"
+) -> jax.Array:
+    """Segment reduction over *sorted* segment ids (CSR/CSC edge order).
+
+    values: (E, F) f32/bf16; segment_ids: (E,) int32 non-decreasing, with
+    out-of-range ids (>= num_segments) acting as padding.  Empty segments
+    produce 0 for every op.
+    """
+    valid = segment_ids < num_segments
+    ids = jnp.where(valid, segment_ids, num_segments)
+    v = jnp.where(valid[:, None], values, 0.0).astype(jnp.float32)
+    kw = dict(num_segments=num_segments + 1, indices_are_sorted=True)
+    count = jax.ops.segment_sum(valid.astype(jnp.float32), ids, **kw)[:-1, None]
+    if op == "sum":
+        out = jax.ops.segment_sum(v, ids, **kw)[:-1]
+    elif op == "mean":
+        out = jax.ops.segment_sum(v, ids, **kw)[:-1] / jnp.maximum(count, 1.0)
+    elif op == "sqsum":
+        out = jax.ops.segment_sum(v * v, ids, **kw)[:-1]
+    elif op in ("max", "min"):
+        fill = -jnp.inf if op == "max" else jnp.inf
+        vm = jnp.where(valid[:, None], values.astype(jnp.float32), fill)
+        fn = jax.ops.segment_max if op == "max" else jax.ops.segment_min
+        out = fn(vm, ids, **kw)[:-1]
+        out = jnp.where(count > 0, out, 0.0)
+    else:
+        raise ValueError(f"unknown op {op!r}")
+    return out.astype(values.dtype)
+
+
+def node_mlp_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, activation: str = "relu"
+) -> jax.Array:
+    """Fused linear + bias + activation (the Node-Embedding 'MLP PE').
+
+    x: (M, K); w: (K, N); b: (N,).  Accumulation in f32.
+    """
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "gelu":
+        y = jax.nn.gelu(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y.astype(x.dtype)
+
+
+def edge_softmax_ref(
+    logits: jax.Array, segment_ids: jax.Array, num_segments: int
+) -> jax.Array:
+    """Numerically-stable per-destination softmax over sorted edges (GAT).
+
+    logits: (E, H) attention logits per head; returns (E, H) weights that
+    sum to 1 within each (segment, head); padding edges get weight 0.
+    """
+    valid = segment_ids < num_segments
+    ids = jnp.where(valid, segment_ids, num_segments)
+    kw = dict(num_segments=num_segments + 1, indices_are_sorted=True)
+    lm = jnp.where(valid[:, None], logits.astype(jnp.float32), -jnp.inf)
+    seg_max = jax.ops.segment_max(lm, ids, **kw)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    z = jnp.exp(lm - seg_max[ids])
+    z = jnp.where(valid[:, None], z, 0.0)
+    seg_sum = jax.ops.segment_sum(z, ids, **kw)
+    return (z / jnp.maximum(seg_sum[ids], 1e-30)).astype(logits.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Full (quadratic) GQA attention oracle.
+
+    q: (B, Hq, S, D); k/v: (B, Hkv, S, D) with Hq % Hkv == 0.
+    window: sliding-window size (None = full); causal mask always applied
+    when ``causal``.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    kq = jnp.repeat(k, g, axis=1)
+    vq = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kq.astype(jnp.float32)) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vq.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,358 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512"
+    " --xla_backend_optimization_level=0"
+    " --xla_llvm_disable_expensive_passes=true"
+)
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell with ShapeDtypeStruct inputs (no allocation), record memory analysis,
+cost analysis and the collective schedule.
+
+Usage:
+  python -m repro.launch.dryrun --arch starcoder2-15b --shape train_4k
+  python -m repro.launch.dryrun --all                     # all 40 cells, both meshes
+  python -m repro.launch.dryrun --all --mesh single       # roofline table mesh
+
+The first two lines of this file set the 512-device placeholder count and
+MUST precede any other import (jax locks the device count on first init).
+Results are cached as JSON under experiments/dryrun/.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import params as P
+from repro import roofline as R
+from repro import sharding as SH
+from repro.configs import ARCHS, get_config
+from repro.launch import specs as SPECS
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.optim import adamw
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+# attention chunk per shape keeps the unrolled-HLO size and the transient
+# logits footprint bounded (see DESIGN.md §7)
+_ATTN_CHUNK = {"train_4k": 2048, "prefill_32k": 8192, "decode_32k": 8192, "long_500k": 8192}
+_LOSS_CHUNK = {"train_4k": 512}
+
+# long_500k runs only for sub-quadratic archs (per the brief); whisper's
+# decoder context is 448 by design, so a 500k cache is not meaningful.
+def cell_skip_reason(arch: str, cfg: ModelConfig, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k":
+        if arch == "whisper-base":
+            return "whisper decoder context is 448; 500k KV cache not meaningful"
+        if not cfg.is_sub_quadratic:
+            return "pure full-attention arch: long_500k skipped per brief"
+    return None
+
+
+def _cache_len(shape: ShapeConfig) -> int:
+    return shape.seq_len
+
+
+def build_lowerable(cfg: ModelConfig, shape: ShapeConfig, mesh, rules, zero1: bool = False):
+    """Returns (jitted_fn, example_args) ready for .lower()."""
+    params_struct = jax.eval_shape(partial(lm.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    pvals = P.values(params_struct)
+    p_sh = SH.tree_shardings(params_struct, mesh, rules)
+
+    batch_struct = SPECS.batch_specs(cfg, shape)
+    b_axes = SPECS.batch_axes(cfg)
+    b_sh = {
+        k: jax.sharding.NamedSharding(
+            mesh, SH.resolve_spec(b_axes[k], v.shape, mesh, rules)
+        )
+        for k, v in batch_struct.items()
+    }
+
+    if shape.kind == "train":
+        opt_struct = jax.eval_shape(adamw.init, pvals)
+        m_sh = p_sh
+        if zero1:  # ZeRO-1: moments additionally sharded over data
+            m_sh = jax.tree.map(
+                lambda s, v: jax.sharding.NamedSharding(
+                    mesh, SH.zero1_spec(s.spec, v.shape, mesh, "data")
+                ),
+                p_sh, pvals,
+                is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding),
+            )
+        o_sh = {
+            "m": m_sh,
+            "v": m_sh,
+            "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        }
+        opt_cfg = adamw.AdamWConfig()
+
+        def train_step(params, opt_state, batch):
+            (loss, aux), grads = jax.value_and_grad(lm.loss_fn, has_aux=True)(
+                params, batch, cfg
+            )
+            new_p, new_o, om = adamw.update(opt_cfg, grads, opt_state, params)
+            return new_p, new_o, {"loss": loss, **om}
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        )
+        return fn, (pvals, opt_struct, batch_struct), params_struct
+
+    if shape.kind == "prefill":
+
+        def prefill_step(params, batch):
+            return lm.prefill(params, batch, cfg, _cache_len(shape))
+
+        fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh))
+        return fn, (pvals, batch_struct), params_struct
+
+    # decode
+    cache_small = lm.init_cache(cfg, 1, 8)  # tiny: only for axes structure
+    cache_axes = P.axes(cache_small)
+    cache_struct = jax.eval_shape(
+        lambda: P.values(lm.init_cache(cfg, shape.global_batch, _cache_len(shape)))
+    )
+    c_sh = jax.tree.map(
+        lambda v, a: jax.sharding.NamedSharding(
+            mesh, SH.resolve_spec(a, v.shape, mesh, rules)
+        ),
+        cache_struct,
+        cache_axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    tok_struct, t_struct = SPECS.decode_token_specs(cfg, shape)
+    tok_sh = jax.sharding.NamedSharding(
+        mesh, SH.resolve_spec(("batch", None), tok_struct.shape, mesh, rules)
+    )
+    t_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    def serve_step(params, cache, tokens, t):
+        return lm.decode_step(params, cache, tokens, t, cfg)
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(p_sh, c_sh, tok_sh, t_sh),
+        out_shardings=(None, c_sh),
+        donate_argnums=(1,),
+    )
+    return fn, (pvals, cache_struct, tok_struct, t_struct), params_struct
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    stack_mode: str = "unroll",
+    overrides: dict | None = None,
+    tag: str = "",
+    rules_preset: str = "default",
+) -> dict:
+    shape = SHAPES[shape_name]
+    kw = dict(stack_mode=stack_mode)
+    if shape_name in _ATTN_CHUNK:
+        kw["attn_chunk"] = _ATTN_CHUNK[shape_name]
+    if shape_name in _LOSS_CHUNK:
+        kw["loss_chunk"] = _LOSS_CHUNK[shape_name]
+    kw.update(overrides or {})
+    cfg = get_config(arch, **kw)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "multi_pod": multi_pod,
+        "kind": shape.kind,
+        "stack_mode": cfg.stack_mode,
+        "overrides": overrides or {},
+        "tag": tag,
+    }
+    skip = cell_skip_reason(arch, cfg, shape)
+    if skip:
+        rec["skipped"] = skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if rules_preset.startswith("fsdp"):
+        rules = SH.fsdp_rules(mesh, shape.global_batch)
+    else:
+        rules = SH.batch_rules(mesh, shape.global_batch)
+    rec["rules"] = rules_preset
+    fn, args, params_struct = build_lowerable(
+        cfg, shape, mesh, rules, zero1=rules_preset.endswith("+zero1")
+    )
+
+    t0 = time.time()
+    # set_mesh + active_rules make logical_constraint() live during tracing
+    with jax.set_mesh(mesh), SH.active_rules(rules):
+        lowered = fn.lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["flops_per_device"] = float(ca.get("flops", 0.0))
+    rec["bytes_per_device"] = float(ca.get("bytes accessed", 0.0))
+
+    hlo = compiled.as_text()
+    rec["hlo_lines"] = hlo.count("\n")
+    colls = R.parse_collectives(hlo)
+    rec["collectives"] = colls
+    rec["collectives_corrected"] = R.bf16_normalization_correction(
+        colls, cfg.dtype == "bfloat16"
+    )
+    rec["collective_summary"] = R.summarize_collectives(rec["collectives_corrected"])
+    del hlo
+
+    # analytic MODEL_FLOPS (per device): 6ND train / 2ND inference
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = R.model_flops(cfg, params_struct, tokens, shape.kind)
+    rec["model_flops_per_device"] = mf / mesh.size
+    rec["hbm_estimate"] = estimate_hbm(cfg, shape, mesh, rec, rules)
+    rec["roofline"] = R.cell_roofline(rec)
+    return rec
+
+
+def estimate_hbm(cfg: ModelConfig, shape: ShapeConfig, mesh, rec: dict, rules=None) -> dict:
+    """Analytic per-device HBM estimate for the 'fits' argument.
+
+    The CPU backend's buffer assignment reports temp sizes without the
+    TPU backend's aggressive reuse (and with bf16 normalized to f32), so
+    ``memory.temp_bytes`` is a loose upper bound.  This model counts what
+    a TPU build keeps live: arguments (params/opt/cache — measured),
+    remat residuals (one residual-stream tensor per layer), gradient
+    accumulators, and the largest transient working set.
+    """
+    # resolve the actual batch sharding under the active rules (FSDP puts
+    # batch over the model axis too)
+    rules = rules or SH.batch_rules(mesh, shape.global_batch)
+    bspec = SH.resolve_spec(("batch",), (shape.global_batch,), mesh, rules)
+    axes0 = bspec[0]
+    if axes0 is None:
+        dp = 1
+    elif isinstance(axes0, tuple):
+        dp = 1
+        for a in axes0:
+            dp *= mesh.shape[a]
+    else:
+        dp = mesh.shape[axes0]
+    tp = mesh.shape.get("model", 1)
+    b_loc = max(shape.global_batch // dp, 1)
+    s = shape.seq_len if shape.kind != "decode" else 1
+    dt = 2 if cfg.dtype == "bfloat16" else 4
+    resid = b_loc * s * cfg.d_model * dt
+    est = {"argument_bytes": rec["memory"]["argument_bytes"]}
+    if shape.kind == "train":
+        est["remat_residuals"] = cfg.num_layers * resid
+        est["grads_f32"] = rec["memory"]["argument_bytes"] // 3  # ~params f32/ (p+m+v)
+        chunk = min(cfg.attn_chunk, shape.seq_len)
+        h_loc = max(cfg.num_heads // tp, 1)
+        est["transient"] = max(
+            4 * b_loc * h_loc * chunk * chunk * 4,  # attention logits block (f32)
+            4 * b_loc * s * (cfg.d_ff // max(tp, 1) or cfg.d_ff) * dt,  # mlp h
+        )
+    else:
+        est["transient"] = 4 * resid
+    est["total"] = int(sum(v for v in est.values()))
+    est["fits_16gb"] = bool(est["total"] < 16e9)
+    return est
+
+
+def cell_path(arch, shape_name, multi_pod, tag=""):
+    mesh = "multi" if multi_pod else "single"
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mesh}{suffix}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--stack-mode", default="unroll", choices=("unroll", "scan"))
+    ap.add_argument("--tag", default="", help="experiment tag for perf variants")
+    ap.add_argument("--rules", default="default", choices=("default", "fsdp", "fsdp+zero1"),
+                    help="sharding-rules preset")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (int/float/str)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    archs = list(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                path = cell_path(arch, shape_name, multi_pod, args.tag)
+                if os.path.exists(path) and not args.force:
+                    print(f"[cached] {path}")
+                    continue
+                label = f"{arch} x {shape_name} x {'multi' if multi_pod else 'single'}"
+                print(f"[lower ] {label} ...", flush=True)
+                try:
+                    rec = run_cell(
+                        arch, shape_name, multi_pod,
+                        stack_mode=args.stack_mode, overrides=overrides,
+                        tag=args.tag, rules_preset=args.rules,
+                    )
+                except Exception as e:  # noqa: BLE001 — record + continue the sweep
+                    failures += 1
+                    rec = {
+                        "arch": arch, "shape": shape_name,
+                        "multi_pod": multi_pod, "tag": args.tag,
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                    print(f"[FAIL  ] {label}: {e}")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if "error" not in rec:
+                    if rec.get("skipped"):
+                        print(f"[skip  ] {label}: {rec['skipped']}")
+                    else:
+                        r = rec["roofline"]
+                        print(
+                            f"[ok    ] {label}: compile={rec['compile_s']}s "
+                            f"flops/dev={rec['flops_per_device']:.3e} "
+                            f"bound={r['bound']} "
+                            f"terms(c/m/n)=({r['compute_s']:.4f},{r['memory_s']:.4f},{r['collective_s']:.4f})s",
+                            flush=True,
+                        )
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""ShapeDtypeStruct input stand-ins per (architecture x shape) — the
+weak-type-correct, shardable, zero-allocation inputs the dry-run lowers
+against.  Modality frontends are stubs: vlm provides patch embeddings,
+audio provides post-conv frame embeddings, per the brief.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Training/prefill batch: tokens + modality extras.
+
+    For vlm the patch stub occupies the first ``num_patches`` positions of
+    the sequence budget; for audio, tokens are decoder tokens and frames
+    are the fixed-length encoder input.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    specs = {}
+    if cfg.family == "vlm":
+        s_text = s - cfg.num_patches
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        specs["patches"] = jax.ShapeDtypeStruct((b, cfg.num_patches, cfg.d_model), _dt(cfg))
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), _dt(cfg))
+    return specs
+
+
+def batch_axes(cfg: ModelConfig) -> dict:
+    """Logical axes per batch entry (for sharding resolution)."""
+    axes = {"tokens": ("batch", "seq")}
+    if cfg.family == "vlm":
+        axes["patches"] = ("batch", "seq", "embed")
+    if cfg.family == "audio":
+        axes["frames"] = ("batch", "seq", "embed")
+    return axes
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig) -> tuple:
+    """(tokens (B,1), t ()) for decode_step."""
+    b = shape.global_batch
+    return (
+        jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )

@@ -1,0 +1,2 @@
+"""LM substrate: configs, layers, MoE, SSM mixers, stack, entry points."""
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES

@@ -1,0 +1,430 @@
+"""Transformer building blocks: norms, RoPE, dense MLPs, GQA/MLA attention.
+
+Attention comes in two executable forms with identical semantics:
+  * ``blocked_attention`` — pure-jnp flash-style q/kv-blocked online
+    softmax with *static* block skipping (causal + sliding window).  The
+    python block loops unroll, so (a) the (S,S) score matrix never
+    materializes, and (b) HLO FLOPs are trip-count-faithful for the
+    dry-run cost analysis (skipped blocks contribute nothing).
+  * the Pallas kernel (kernels/flash_attention.py) for TPU deployment.
+
+Decode-time attention is a separate single-token path over a KV cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import params as P
+from repro.models.config import ModelConfig
+from repro.sharding import logical_constraint as _lc
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def rms_norm_init(dim: int) -> P.Param:
+    return P.init_ones((dim,), ("embed",))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float, fraction: float = 1.0):
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S) int32.
+
+    Rotates the first ``fraction * D`` dims (chatglm-style partial rotary).
+    """
+    d = x.shape[-1]
+    rot = int(d * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    freqs = rope_freqs(rot, theta)  # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, rot/2)
+    while ang.ndim < xr.ndim:
+        ang = ang[..., None, :]  # broadcast over head dim(s)
+    # angles in f32, rotation applied in x.dtype: an f32 multiply here
+    # promotes the whole backward residual chain to f32 (measured: 2x
+    # collective wire on the dry-run) — the standard bf16-rope trade.
+    cos = jnp.cos(ang).astype(x.dtype)
+    sin = jnp.sin(ang).astype(x.dtype)
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# dense MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(rng, 3)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "wi": P.init_normal(k1, (d, 2, f), ("embed", None, "mlp")),
+            "wo": P.init_normal(k2, (f, d), ("mlp", "embed")),
+        }
+    if cfg.mlp_type == "relu_sq":  # rwkv6 channel-mix
+        return {
+            "wk": P.init_normal(k1, (d, f), ("embed", "mlp")),
+            "wv": P.init_normal(k2, (f, d), ("mlp", "embed")),
+            "wr": P.init_normal(k3, (d, d), ("embed", "embed_out")),
+            "mix_k": P.init_zeros((d,), ("embed",)),
+            "mix_r": P.init_zeros((d,), ("embed",)),
+        }
+    return {  # plain gelu/relu (starcoder2, whisper)
+        "wi": P.init_normal(k1, (d, f), ("embed", "mlp")),
+        "wo": P.init_normal(k2, (f, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        h = jnp.einsum("...d,dgf->...gf", x, p["wi"])
+        gate, up = h[..., 0, :], h[..., 1, :]
+        act = jax.nn.silu(gate) if cfg.mlp_type == "swiglu" else jax.nn.gelu(gate)
+        return jnp.einsum("...f,fd->...d", act * up, p["wo"])
+    if cfg.mlp_type == "relu_sq":
+        raise ValueError("rwkv channel-mix is applied via ssm.rwkv_channel_mix")
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["wi"]))
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# blocked (flash-style) attention — pure jnp, statically pruned
+# ---------------------------------------------------------------------------
+
+_NEG = -1e30
+
+
+def repeat_kv(k: jax.Array, g: int) -> jax.Array:
+    """(B,S,Hkv,D) -> (B,S,Hkv*g,D).  GQA under tensor parallelism: expand
+    KV to the full (TP-sharded) head count rather than grouping Q — a
+    grouped (Hkv, g) reshape breaks GSPMD head sharding whenever Hkv or g
+    is not divisible by the model axis (measured: replicated attention,
+    ~50x temp memory).  The repeat is cheap: KV is the small tensor."""
+    if g == 1:
+        return k
+    return jnp.repeat(k, g, axis=2)
+
+
+def _block_attend(q, k, v, qpos, kpos, window: int, softcap: float):
+    """One (q-block, kv-block) tile. q: (B,Sq,H,D), k/v: (B,Sk,H,D)."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask, s, _NEG)
+    m = jnp.max(s, axis=-1)  # (B,H,Sq)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bhqd", p, v.astype(jnp.float32))
+    return m, l, o
+
+
+def blocked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    cfg: ModelConfig,
+    window: int = 0,
+    chunk: int | None = None,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Causal GQA attention.  q: (B,S,H,D); k,v: (B,S,Hkv,D) -> (B,S,H,D).
+
+    Python-unrolled q x kv block loops; blocks fully outside the causal /
+    window band are skipped *statically* (no HLO emitted, no FLOPs counted,
+    no memory touched) — the jnp mirror of the Pallas kernel's pl.when
+    pruning and of GenGNN's "only touch real neighbours" principle.
+    """
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]  # may differ from d (MLA prefill)
+    g = h // hkv
+    c = min(chunk or cfg.attn_chunk, s)
+    n_blocks = math.ceil(s / c)
+    scale = 1.0 / math.sqrt(d)
+    qs = q * scale
+    kr = repeat_kv(k, g)
+    vr = repeat_kv(v, g)
+    pos = jnp.arange(s)
+
+    out_blocks = []
+    for i in range(n_blocks):
+        q0, q1 = i * c, min((i + 1) * c, s)
+        qi = qs[:, q0:q1]
+        qpos = pos[q0:q1]
+        m_acc = jnp.full((b, h, q1 - q0), _NEG, jnp.float32)
+        l_acc = jnp.zeros((b, h, q1 - q0), jnp.float32)
+        o_acc = jnp.zeros((b, h, q1 - q0, dv), jnp.float32)
+        for j in range(n_blocks):
+            k0, k1 = j * c, min((j + 1) * c, s)
+            if k0 > q1 - 1:  # entirely above the diagonal
+                continue
+            if window and k1 - 1 <= q0 - window:  # entirely left of window
+                continue
+            m, l, o = _block_attend(
+                qi, kr[:, k0:k1], vr[:, k0:k1], qpos, pos[k0:k1], window, softcap
+            )
+            m_new = jnp.maximum(m_acc, m)
+            alpha = jnp.exp(m_acc - m_new)
+            beta = jnp.exp(m - m_new)
+            l_acc = alpha * l_acc + beta * l
+            o_acc = alpha[..., None] * o_acc + beta[..., None] * o
+            m_acc = m_new
+        o = o_acc / jnp.maximum(l_acc, 1e-30)[..., None]
+        out_blocks.append(o)
+    out = jnp.concatenate(out_blocks, axis=2)  # (B,H,S,Dv)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    t: jax.Array,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Single-token attention over a cache.
+
+    q: (B,1,H,D); caches: (B,S,Hkv,D); t: () int32 current position.
+    Positions > t (unwritten cache) and outside the window are masked.
+    """
+    b, _, h, d = q.shape
+    s = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    qs = (q / math.sqrt(d)).reshape(b, h, d)
+    kr = repeat_kv(k_cache, g)
+    vr = repeat_kv(v_cache, g)
+    logits = jnp.einsum(
+        "bhd,bkhd->bhk", qs.astype(jnp.float32), kr.astype(jnp.float32)
+    )
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    kpos = jnp.arange(s)
+    mask = kpos <= t
+    if window:
+        mask &= kpos > t - window
+    logits = jnp.where(mask[None, None, :], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhk,bkhd->bhd", p, vr.astype(jnp.float32))
+    return o[:, None].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (init + train/prefill/decode apply)
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(rng, cfg: ModelConfig) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": P.init_normal(ks[0], (d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": P.init_normal(ks[1], (d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": P.init_normal(ks[2], (d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": P.init_normal(ks[3], (h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = P.init_ones((hd,), ("head_dim",))
+        p["k_norm"] = P.init_ones((hd,), ("head_dim",))
+    return p
+
+
+def gqa_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    window: int,
+    positions: jax.Array | None = None,
+    kv_cache: tuple | None = None,
+    t: jax.Array | None = None,
+    causal: bool = True,
+):
+    """Returns (out, new_kv) where new_kv is (k, v) for cache construction.
+
+    Train/prefill: x (B,S,D), kv_cache None -> full blocked attention.
+    Decode: x (B,1,D), kv_cache (k,v) of shape (B,S,Hkv,hd), t = position.
+    """
+    b, s, _ = x.shape
+    wk, wv = p["wk"], p["wv"]
+    hkv = wk.shape[1]
+    if cfg.kv_heads_effective > hkv:
+        rep = cfg.kv_heads_effective // hkv  # tied-copy KV padding to TP width
+        wk = jnp.repeat(wk, rep, axis=1)
+        wv = jnp.repeat(wv, rep, axis=1)
+    q = _lc(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), ("batch", "seq", "heads", None))
+    k = _lc(jnp.einsum("bsd,dhk->bshk", x, wk), ("batch", "seq", "kv_heads", None))
+    v = _lc(jnp.einsum("bsd,dhk->bshk", x, wv), ("batch", "seq", "kv_heads", None))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if positions is None:
+        positions = jnp.arange(s)[None, :] if t is None else jnp.full((b, 1), t)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    if kv_cache is None:
+        if causal:
+            o = blocked_attention(q, k, v, cfg, window=window, softcap=cfg.logit_softcap)
+        else:  # encoder self-attention (whisper): full bidirectional
+            o = _bidirectional_attention(q, k, v)
+        new_kv = (k, v)
+    else:
+        kc, vc = kv_cache  # decode: write slot t, attend over the cache
+        kc = _cache_update(kc, k, t)
+        vc = _cache_update(vc, v, t)
+        o = decode_attention(q, kc, vc, t, window=window, softcap=cfg.logit_softcap)
+        new_kv = (kc, vc)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, new_kv
+
+
+def _cache_update(cache: jax.Array, kv: jax.Array, t: jax.Array) -> jax.Array:
+    """cache (B,S,Hkv,D) <- kv (B,1,Hkv,D) at position t."""
+    return jax.lax.dynamic_update_slice(cache, kv.astype(cache.dtype), (0, t, 0, 0))
+
+
+def _bidirectional_attention(q, k, v):
+    """Full bidirectional GQA attention (encoder / cross-attention)."""
+    b, s, h, d = q.shape
+    g = h // k.shape[2]
+    kr = repeat_kv(k, g)
+    vr = repeat_kv(v, g)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) / math.sqrt(d)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def cross_attention_apply(p: dict, x: jax.Array, enc_k, enc_v, cfg: ModelConfig):
+    """Decoder cross-attention over precomputed encoder K/V (whisper)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    o = _bidirectional_attention(q, enc_k, enc_v)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def cross_kv(p: dict, enc_out: jax.Array):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (minicpm3 / deepseek family)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(rng, cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(rng, 8)
+    return {
+        "w_dq": P.init_normal(ks[0], (d, qr), ("embed", "q_lora")),
+        "q_norm": P.init_ones((qr,), ("q_lora",)),
+        "w_uq": P.init_normal(ks[1], (qr, h, dn + dr), ("q_lora", "heads", "head_dim")),
+        "w_dkv": P.init_normal(ks[2], (d, kvr), ("embed", "kv_lora")),
+        "kv_norm": P.init_ones((kvr,), ("kv_lora",)),
+        "w_kr": P.init_normal(ks[3], (d, dr), ("embed", "head_dim")),
+        "w_uk": P.init_normal(ks[4], (kvr, h, dn), ("kv_lora", "heads", "head_dim")),
+        "w_uv": P.init_normal(ks[5], (kvr, h, dv), ("kv_lora", "heads", "head_dim")),
+        "wo": P.init_normal(ks[6], (h, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array | None = None,
+    cache: tuple | None = None,
+    t: jax.Array | None = None,
+):
+    """MLA attention.  Cache holds only (c_kv, k_rope): (B,S,kvr), (B,S,dr) —
+    the latent compression that gives MLA its small-cache property.
+
+    Prefill/train: expand per-head keys/values and run blocked attention.
+    Decode: absorbed form — score in the kv_lora latent space, never
+    materializing per-head keys (FLOPs ~ H * (dn*kvr) per cached token).
+    """
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    if positions is None:
+        positions = jnp.arange(s)[None, :] if t is None else jnp.full((b, 1), t)
+    q_lat = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, p["w_uq"])  # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"])
+    k_rope = apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, p["w_kr"]), positions, cfg.rope_theta
+    )  # (B,S,dr) single shared rope key
+
+    if cache is None:
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+        v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))], axis=-1
+        )
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = blocked_attention(qq, k, v, cfg, window=0)  # (B,S,H,dv)
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+        return out, (c_kv, k_rope)
+
+    ckv_cache, krope_cache = cache
+    ckv_cache = jax.lax.dynamic_update_slice(
+        ckv_cache, c_kv.astype(ckv_cache.dtype), (0, t, 0)
+    )
+    krope_cache = jax.lax.dynamic_update_slice(
+        krope_cache, k_rope.astype(krope_cache.dtype), (0, t, 0)
+    )
+    # absorbed scores: q_abs (B,H,kvr) = q_nope . W_uk
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])[:, 0]  # (B,H,kvr)
+    scale = 1.0 / math.sqrt(dn + dr)
+    s_lat = jnp.einsum(
+        "bhr,bkr->bhk", q_abs.astype(jnp.float32), ckv_cache.astype(jnp.float32)
+    )
+    s_rope = jnp.einsum(
+        "bhr,bkr->bhk",
+        q_rope[:, 0].astype(jnp.float32),
+        krope_cache.astype(jnp.float32),
+    )
+    logits = (s_lat + s_rope) * scale
+    kpos = jnp.arange(ckv_cache.shape[1])
+    logits = jnp.where(kpos[None, None, :] <= t, logits, _NEG)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhk,bkr->bhr", probs, ckv_cache.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhk->bhk", o_lat, p["w_uv"].astype(jnp.float32))  # (B,H,dv)
+    out = jnp.einsum("bhk,hkd->bd", o.astype(x.dtype), p["wo"])[:, None, :]
+    return out, (ckv_cache, krope_cache)

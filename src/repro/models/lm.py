@@ -1,0 +1,256 @@
+"""Top-level language model: embeddings, stack, losses, step functions.
+
+Families:
+  dense/moe/hybrid/ssm — decoder-only LM over tokens.
+  vlm   — decoder-only over [patch embeddings ; token embeddings]; the
+          vision frontend is a STUB per the brief: ``input_specs`` provides
+          precomputed ViT patch embeddings.
+  audio — encoder-decoder (whisper): encoder over precomputed log-mel
+          frame embeddings (conv frontend STUB), decoder with
+          cross-attention.
+
+The cross-entropy loss is *vocab- and sequence-chunked*: logits are
+computed per sequence chunk under ``jax.checkpoint`` so the (B,S,V) tensor
+is never materialized — required for vocab=262k at 32k context.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import params as P
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    """Returns a Param tree (values + logical axes)."""
+    k_emb, k_stack, k_head, k_enc = jax.random.split(rng, 4)
+    dt = _dt(cfg)
+    p: dict = {
+        "embed": P.init_normal(k_emb, (cfg.vocab_size, cfg.d_model), ("vocab", "embed")),
+        "final_norm": L.rms_norm_init(cfg.d_model),
+        "blocks": T.stack_init(k_stack, cfg, cross_attention=cfg.family == "audio"),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = P.init_normal(
+            k_head, (cfg.d_model, cfg.vocab_size), ("embed", "vocab")
+        )
+    if cfg.family == "audio":
+        enc_cfg = encoder_config(cfg)
+        p["enc_blocks"] = T.stack_init(k_enc, enc_cfg)
+        p["enc_norm"] = L.rms_norm_init(cfg.d_model)
+        p["enc_pos"] = P.init_normal(
+            k_enc, (cfg.encoder_seq, cfg.d_model), ("kv_seq", "embed"), scale=0.02
+        )
+    # cast matmul weights to model dtype (norms/scalars stay f32)
+    def cast(pr: P.Param):
+        v = pr.value
+        if v.ndim >= 2:
+            return P.Param(v.astype(dt), pr.axes)
+        return pr
+
+    return jax.tree.map(cast, p, is_leaf=P.is_param)
+
+
+def encoder_config(cfg: ModelConfig) -> ModelConfig:
+    """Whisper encoder: bidirectional dense attention, same width."""
+    import dataclasses
+
+    return dataclasses.replace(
+        cfg,
+        num_layers=cfg.encoder_layers,
+        attn_every=0,
+        num_experts=0,
+        global_every=0,
+        sliding_window=0,
+        family="dense",
+        causal=False,
+        mlp_type="gelu",
+    )
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    e = jnp.take(params["embed"], tokens, axis=0)
+    return (e * math.sqrt(cfg.d_model)).astype(_dt(cfg))
+
+
+def _head_matrix(params, cfg: ModelConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def logits_fn(params, hidden, cfg: ModelConfig):
+    return jnp.einsum("...d,dv->...v", hidden, _head_matrix(params, cfg))
+
+
+# ---------------------------------------------------------------------------
+# encoder (audio) — bidirectional over precomputed frame embeddings
+# ---------------------------------------------------------------------------
+
+
+def encode_audio(params, frames, cfg: ModelConfig):
+    """frames: (B, encoder_seq, d_model) stub embeddings -> encoder output."""
+    enc_cfg = encoder_config(cfg)
+    x = frames.astype(_dt(cfg)) + params["enc_pos"][None].astype(_dt(cfg))
+    # bidirectional: reuse the stack with causal disabled via full-window
+    # attention; whisper is small (6L) so always unrolled.
+    x, _, _ = T.stack_apply(params["enc_blocks"], x, enc_cfg, remat=False)
+    return L.rms_norm(x, params["enc_norm"])
+
+
+def cross_kv_all(params, enc_out, cfg: ModelConfig):
+    """Precompute cross-attention K/V for every decoder block position."""
+    out = []
+    for pos in range(cfg.group_size):
+        cross = params["blocks"][pos]["cross"]
+        k = jnp.einsum("bsd,Ldhk->Lbshk", enc_out, cross["wk"])
+        v = jnp.einsum("bsd,Ldhk->Lbshk", enc_out, cross["wv"])
+        out.append((k, v))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def forward_hidden(params, batch: dict, cfg: ModelConfig):
+    """Training/prefill forward to final hidden states.
+
+    batch: {"tokens": (B,S)} (+ "patches" (B,P,D) for vlm, "frames" for
+    audio).  Returns (hidden (B,S,D), aux_loss).
+    """
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    enc_kv = None
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(x.dtype)  # (B, P, D) stub
+        x = jnp.concatenate([patches, x], axis=1)
+    if cfg.family == "audio":
+        enc_out = encode_audio(params, batch["frames"], cfg)
+        enc_kv = cross_kv_all(params, enc_out, cfg)
+    x, _, aux = T.stack_apply(params["blocks"], x, cfg, enc_kv=enc_kv)
+    return L.rms_norm(x, params["final_norm"]), aux
+
+
+def chunked_ce_loss(params, hidden, labels, weights, cfg: ModelConfig):
+    """Mean CE over weighted positions; logits chunked over sequence and
+    rematerialized in backward."""
+    b, s, d = hidden.shape
+    c = min(cfg.loss_chunk, s)
+    n_chunks = math.ceil(s / c)
+    head = _head_matrix(params, cfg)
+
+    def chunk_loss(h, l, w):
+        logits = jnp.einsum("bsd,dv->bsv", h, head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * w)
+
+    total = jnp.zeros((), jnp.float32)
+    for i in range(n_chunks):
+        sl = slice(i * c, min((i + 1) * c, s))
+        total = total + jax.checkpoint(chunk_loss)(
+            hidden[:, sl], labels[:, sl], weights[:, sl]
+        )
+    return total / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig):
+    """batch: tokens (B,S) used as inputs; labels = tokens shifted left."""
+    hidden, aux = forward_hidden(params, batch, cfg)
+    tokens = batch["tokens"]
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    weights = jnp.ones_like(labels, jnp.float32)
+    weights = weights.at[:, -1].set(0.0)
+    if cfg.family == "vlm":  # hidden includes patch positions: no LM loss there
+        hidden = hidden[:, cfg.num_patches :]
+    loss = chunked_ce_loss(params, hidden, labels, weights, cfg)
+    return loss + cfg.router_aux_coef * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> list:
+    return T.stack_cache_init(cfg, batch, seq, _dt(cfg))
+
+
+_SEQ_CACHE_KEYS = ("k", "v", "ckv", "krope")  # entries indexed by position
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, cache_len: int):
+    """Run the prompt through the stack, building the decode cache.
+
+    The stack runs in ``mode="prefill"``: attention layers return their
+    full-sequence K/V (captured during the same forward pass, no
+    recomputation) and SSM/RWKV layers return their final recurrent state.
+    Sequence-indexed entries are written into a zero cache of length
+    ``cache_len``; states are carried as-is.
+
+    Returns (cache, last_logits, t0).
+    """
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = embed_tokens(params, tokens, cfg)
+    enc_kv = None
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    if cfg.family == "audio":
+        enc_out = encode_audio(params, batch["frames"], cfg)
+        enc_kv = cross_kv_all(params, enc_out, cfg)
+    s = x.shape[1]
+
+    x, captured, _ = T.stack_apply(
+        params["blocks"], x, cfg, mode="prefill", enc_kv=enc_kv
+    )
+    hidden = L.rms_norm(x, params["final_norm"])
+    last_logits = logits_fn(params, hidden[:, -1:], cfg)[:, 0]
+
+    cache = P.values(init_cache(cfg, b, cache_len))
+    for pos in range(cfg.group_size):
+        for key, val in captured[pos].items():
+            if key in _SEQ_CACHE_KEYS:  # (G,B,S,...) -> cache[:, :, :S]
+                cache[pos][key] = jax.lax.dynamic_update_slice(
+                    cache[pos][key],
+                    val.astype(cache[pos][key].dtype),
+                    (0,) * cache[pos][key].ndim,
+                )
+            else:
+                cache[pos][key] = val.astype(cache[pos][key].dtype)
+    return cache, last_logits, jnp.asarray(s, jnp.int32)
+
+
+def decode_step(params, cache: list, tokens: jax.Array, t: jax.Array, cfg: ModelConfig):
+    """One token step.  tokens: (B, 1) int32; t: () int32 position.
+    Cross-attention K/V (audio) live in the cache, filled at prefill.
+
+    Returns (logits (B, V), new_cache).
+    """
+    x = embed_tokens(params, tokens, cfg)
+    x, new_cache, _ = T.stack_apply(
+        params["blocks"], x, cfg, mode="decode", cache=cache, t=t
+    )
+    hidden = L.rms_norm(x, params["final_norm"])
+    logits = logits_fn(params, hidden[:, 0], cfg)
+    return logits, new_cache

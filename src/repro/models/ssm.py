@@ -1,0 +1,277 @@
+"""State-space mixers: Mamba (Jamba's 7/8 layers) and RWKV-6 "Finch".
+
+Hardware note (DESIGN.md §2): the recurrences are *chain-graph* message
+passing — no irregularity for GenGNN's scatter-gather to exploit — so they
+use chunked scans instead of the GNN engine.  The elementwise recurrence
+is <1% of layer FLOPs (projections dominate); the chunk loop is a
+``lax.scan`` whose body HLO is counted once by cost_analysis, and
+roofline.py applies the exact analytic trip-count correction (recorded as
+``scan_flops_note``).
+
+Mamba: selective SSM with diagonal A; intra-chunk ``associative_scan``
+(log-depth, numerically safe), inter-chunk state carried by ``lax.scan``.
+RWKV-6: data-dependent-decay linear attention; per-head (hd x hd) wkv
+state updated per token inside a time scan.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro import params as P
+from repro.models.config import ModelConfig
+from repro.sharding import logical_constraint as _lc
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(rng, cfg: ModelConfig) -> dict:
+    d, di, ds, dc = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.d_conv
+    dtr = max(d // 16, 1)
+    ks = jax.random.split(rng, 6)
+    a = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": P.init_normal(ks[0], (d, 2, di), ("embed", None, "inner")),
+        "conv_w": P.init_normal(ks[1], (dc, di), (None, "inner"), scale=0.5),
+        "conv_b": P.init_zeros((di,), ("inner",)),
+        "x_proj": P.init_normal(ks[2], (di, dtr + 2 * ds), ("inner", None)),
+        "dt_proj": P.init_normal(ks[3], (dtr, di), (None, "inner")),
+        "dt_bias": P.init_zeros((di,), ("inner",)),
+        "a_log": P.Param(jnp.log(a), ("inner", "state")),
+        "d_skip": P.init_ones((di,), ("inner",)),
+        "out_proj": P.init_normal(ks[4], (di, d), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv.  x: (B,S,di); w: (dc,di).  state: (B,dc-1,di)
+    carries the last dc-1 inputs for decode; returns (y, new_state)."""
+    dc = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, : dc - 1])
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+dc-1, di)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(dc)) + b
+    new_state = xp[:, -(dc - 1) :]
+    return y, new_state
+
+
+def _ssm_params(p, xi, cfg: ModelConfig):
+    """xi: (B,S,di) -> (da, db, c) with da/db: (B,S,di,ds), c: (B,S,ds)."""
+    ds = cfg.d_state
+    dtr = p["dt_proj"].shape[0]
+    xdbc = jnp.einsum("bsi,ir->bsr", xi, p["x_proj"])
+    dt, b_, c = (
+        xdbc[..., :dtr],
+        xdbc[..., dtr : dtr + ds],
+        xdbc[..., dtr + ds :],
+    )
+    dt = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt, p["dt_proj"]) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])  # (di, ds), negative
+    da = jnp.exp(dt[..., None] * a)  # (B,S,di,ds) in (0,1)
+    db = (dt * xi)[..., None] * b_[:, :, None, :]
+    return da.astype(jnp.float32), db.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def _chunk_scan(da, db, h0):
+    """Associative scan within a chunk.  da/db: (B,C,di,ds); h0: (B,di,ds).
+    h_t = da_t * h_{t-1} + db_t.  Returns (h_all (B,C,di,ds), h_last)."""
+    db0 = db.at[:, 0].add(da[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+
+    a_c, h_all = jax.lax.associative_scan(combine, (da, db0), axis=1)
+    return h_all, h_all[:, -1]
+
+
+def mamba_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: dict | None = None,
+    return_state: bool = False,
+):
+    """x: (B,S,D).  state (decode): {"conv": (B,dc-1,di), "ssm": (B,di,ds)}.
+    ``return_state=True`` (prefill) returns the final recurrent state.
+
+    Returns (out (B,S,D), new_state or None).
+    """
+    b, s, _ = x.shape
+    xz = jnp.einsum("bsd,dgi->bsgi", x, p["in_proj"])
+    xz = _lc(xz, ("batch", "seq", None, "inner"))  # d_inner stays on model
+    xi, z = xz[..., 0, :], xz[..., 1, :]
+    conv_state = state["conv"] if state is not None else None
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+    da, db, c = _ssm_params(p, xi, cfg)
+
+    if state is not None and s == 1:  # decode: one recurrence step
+        h = da[:, 0] * state["ssm"] + db[:, 0]  # (B,di,ds)
+        y = jnp.einsum("bis,bs->bi", h, c[:, 0])[:, None, :]
+        new_state = {"conv": new_conv.astype(state["conv"].dtype), "ssm": h}
+    else:  # train/prefill: chunked scan
+        ck = min(cfg.ssm_chunk, s)
+        n_chunks = math.ceil(s / ck)
+        s_pad = n_chunks * ck
+        if s_pad != s:  # identity-decay padding keeps the final state exact
+            pad = ((0, 0), (0, s_pad - s), (0, 0), (0, 0))
+            da = jnp.pad(da, pad, constant_values=1.0)
+            db = jnp.pad(db, pad)
+        h0 = jnp.zeros((b, da.shape[2], da.shape[3]), jnp.float32)
+
+        def step(h, blk):
+            da_c, db_c = blk
+            h_all, h_last = _chunk_scan(da_c, db_c, h)
+            return h_last, h_all
+
+        da_c = da.reshape(b, n_chunks, ck, *da.shape[2:]).swapaxes(0, 1)
+        db_c = db.reshape(b, n_chunks, ck, *db.shape[2:]).swapaxes(0, 1)
+        h_last, h_all = jax.lax.scan(step, h0, (da_c, db_c))
+        h_all = h_all.swapaxes(0, 1).reshape(b, s_pad, *da.shape[2:])[:, :s]
+        y = jnp.einsum("bsin,bsn->bsi", h_all, c)
+        new_state = None
+        if return_state or state is not None:  # prefill
+            new_state = {"conv": new_conv.astype(x.dtype), "ssm": h_last}
+
+    y = y + xi * p["d_skip"]
+    # gate in model dtype: f32 state output must not promote z's cotangent
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+# ---------------------------------------------------------------------------
+
+_RWKV_LORA = 32
+
+
+def rwkv6_init(rng, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    ks = jax.random.split(rng, 10)
+    r = _RWKV_LORA
+    decay = -5.0 + 8.0 * (jnp.arange(d) / max(d - 1, 1)) ** 0.7  # rwkv init curve
+    return {
+        # ddlerp token-shift mixers: 5 targets (w,k,v,r,g) + base mix_x
+        "mix_x": P.init_zeros((d,), ("embed",)),
+        "mix_wkvrg": P.init_zeros((5, d), (None, "embed")),
+        "lora_a": P.init_normal(ks[0], (d, 5, r), ("embed", None, None), scale=0.01),
+        "lora_b": P.init_normal(ks[1], (5, r, d), (None, None, "embed"), scale=0.01),
+        # projections
+        "wr": P.init_normal(ks[2], (d, d), ("embed", "heads_flat")),
+        "wk": P.init_normal(ks[3], (d, d), ("embed", "heads_flat")),
+        "wv": P.init_normal(ks[4], (d, d), ("embed", "heads_flat")),
+        "wg": P.init_normal(ks[5], (d, d), ("embed", "heads_flat")),
+        "wo": P.init_normal(ks[6], (d, d), ("heads_flat", "embed")),
+        # data-dependent decay
+        "w0": P.Param(decay, ("embed",)),
+        "wd_a": P.init_normal(ks[7], (d, 2 * r), ("embed", None), scale=0.01),
+        "wd_b": P.init_normal(ks[8], (2 * r, d), (None, "embed"), scale=0.01),
+        "u": P.init_normal(ks[9], (d,), ("embed",), scale=0.5),
+        # per-head groupnorm
+        "gn_scale": P.init_ones((d,), ("embed",)),
+        "gn_bias": P.init_zeros((d,), ("embed",)),
+    }
+
+
+def _token_shift(x, last=None):
+    """x_{t-1} with zero (or carried) boundary.  x: (B,S,D)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: dict | None = None,
+    return_state: bool = False,
+):
+    """RWKV-6 time mixing.  x: (B,S,D).
+    state (decode): {"shift": (B,1,D), "wkv": (B,H,hd,hd)}."""
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    prev = _token_shift(x, state["shift"] if state is not None else None)
+    dx = prev - x
+    xxx = x + dx * p["mix_x"]
+    lora = jnp.einsum(
+        "mbsr,mrd->mbsd",
+        jnp.tanh(jnp.einsum("bsd,dmr->mbsr", xxx, p["lora_a"])),
+        p["lora_b"],
+    )
+    mixed = x[None] + dx[None] * (p["mix_wkvrg"][:, None, None, :] + lora)
+    xw, xk, xv, xr, xg = mixed[0], mixed[1], mixed[2], mixed[3], mixed[4]
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(b, s, h, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+    dd = jnp.einsum("bsr,rd->bsd", jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["wd_a"])), p["wd_b"])
+    logw = -jnp.exp((p["w0"] + dd).astype(jnp.float32))  # log decay < 0
+    w = jnp.exp(logw).reshape(b, s, h, hd)  # (0,1) decay per channel
+    u = p["u"].reshape(h, hd)
+
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    if state is not None and s == 1:
+        st = state["wkv"]  # (B,H,hd_k,hd_v)
+        kv = kf[:, 0, :, :, None] * vf[:, 0, :, None, :]  # (B,H,hdk,hdv)
+        out = jnp.einsum("bhk,bhkv->bhv", rf[:, 0], st + u[None, :, :, None] * kv)
+        new_st = wf[:, 0, :, :, None] * st + kv
+        y = out[:, None]  # (B,1,H,hd)
+        new_state = {"shift": x[:, -1:].astype(state["shift"].dtype), "wkv": new_st}
+    else:
+
+        def step(st, inp):
+            rt, kt, vt, wt = inp  # (B,H,hd) each
+            kv = kt[:, :, :, None] * vt[:, :, None, :]
+            out = jnp.einsum("bhk,bhkv->bhv", rt, st + u[None, :, :, None] * kv)
+            st = wt[:, :, :, None] * st + kv
+            return st, out
+
+        st0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        xs = tuple(t.swapaxes(0, 1) for t in (rf, kf, vf, wf))
+        st_last, outs = jax.lax.scan(step, st0, xs)
+        y = outs.swapaxes(0, 1)  # (B,S,H,hd)
+        new_state = None
+        if return_state or state is not None:
+            new_state = {"shift": x[:, -1:].astype(x.dtype), "wkv": st_last}
+
+    # per-head group norm, gate, out-proj
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = ((y - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(b, -1, d)
+    yn = (yn * p["gn_scale"] + p["gn_bias"]).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", yn * g, p["wo"])
+    return out, new_state
+
+
+def rwkv_channel_mix(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: dict | None = None,
+    return_state: bool = False,
+):
+    """RWKV-6 channel mix with token shift.  state: {"shift": (B,1,D)}."""
+    prev = _token_shift(x, state["shift"] if state is not None else None)
+    dx = prev - x
+    xk = x + dx * p["mix_k"]
+    xr = x + dx * p["mix_r"]
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"])
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"])) * kv
+    new_state = None
+    if return_state or state is not None:
+        new_state = {"shift": x[:, -1:].astype(x.dtype)}
+    return out, new_state

@@ -1,0 +1,293 @@
+"""Decoder stack builder: periodic heterogeneous blocks, scan or unroll.
+
+Layers are grouped into super-blocks of ``cfg.group_size`` (the pattern
+period: Jamba 1:7 attention:Mamba = 8, Gemma-3 5:1 local:global = 6, dense
+models = 1).  Parameters for position ``pos`` in the group are stacked over
+the ``num_groups`` axis, so:
+
+  * ``stack_mode="scan"``   — lax.scan over groups: compact HLO, fast
+    compile, the runtime path;
+  * ``stack_mode="unroll"`` — python loop over groups: trip-count-faithful
+    HLO for the dry-run cost analysis (DESIGN.md §7).
+
+Both modes share one parameter/checkpoint layout.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import params as P
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.config import ModelConfig
+from repro.sharding import logical_constraint as _lc
+
+Cache = Any  # list[pos] of dicts with (G, ...) stacked leaves
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+
+def block_init(rng, cfg: ModelConfig, pos: int, cross_attention: bool = False) -> dict:
+    keys = jax.random.split(rng, 6)
+    p: dict = {"ln1": L.rms_norm_init(cfg.d_model), "ln2": L.rms_norm_init(cfg.d_model)}
+    kind = cfg.mixer_kind(pos)
+    if kind == "attn":
+        p["mixer"] = (
+            L.mla_init(keys[0], cfg) if cfg.attention == "mla" else L.gqa_init(keys[0], cfg)
+        )
+    elif kind == "mamba":
+        p["mixer"] = SSM.mamba_init(keys[0], cfg)
+    elif kind == "rwkv6":
+        p["mixer"] = SSM.rwkv6_init(keys[0], cfg)
+    else:
+        raise ValueError(kind)
+    if cross_attention:
+        p["ln_cross"] = L.rms_norm_init(cfg.d_model)
+        p["cross"] = L.gqa_init(keys[2], cfg)
+    if cfg.ffn_kind(pos) == "moe":
+        p["ffn"] = MOE.moe_init(keys[1], cfg)
+    elif cfg.mlp_type == "relu_sq":
+        p["ffn"] = L.mlp_init(keys[1], cfg)
+    else:
+        p["ffn"] = L.mlp_init(keys[1], cfg)
+    return p
+
+
+def block_cache_init(cfg: ModelConfig, pos: int, batch: int, seq: int, dtype) -> dict:
+    """Zero decode cache for one block (un-stacked), as Param leaves so the
+    launcher can resolve cache shardings from logical axes."""
+    kind = cfg.mixer_kind(pos)
+    c: dict = {}
+    if cfg.family == "audio":  # cross-attention K/V filled at prefill
+        shp = (batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim_)
+        axes = ("batch", None, "kv_heads", "head_dim")
+        c["cross_k"] = P.Param(jnp.zeros(shp, dtype), axes)
+        c["cross_v"] = P.Param(jnp.zeros(shp, dtype), axes)
+    if kind == "attn":
+        if cfg.attention == "mla":
+            c["ckv"] = P.Param(
+                jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+                ("batch", "kv_seq", "kv_lora"),
+            )
+            c["krope"] = P.Param(
+                jnp.zeros((batch, seq, cfg.qk_rope_dim), dtype),
+                ("batch", "kv_seq", "head_dim"),
+            )
+        else:
+            shp = (batch, seq, cfg.kv_heads_effective, cfg.head_dim_)
+            axes = ("batch", "kv_seq", "kv_heads", "head_dim")
+            c["k"] = P.Param(jnp.zeros(shp, dtype), axes)
+            c["v"] = P.Param(jnp.zeros(shp, dtype), axes)
+    elif kind == "mamba":
+        c["conv"] = P.Param(
+            jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+            ("batch", None, "inner"),
+        )
+        c["ssm"] = P.Param(
+            jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+            ("batch", "inner", "state"),
+        )
+    elif kind == "rwkv6":
+        c["shift"] = P.Param(jnp.zeros((batch, 1, cfg.d_model), dtype), ("batch", None, "embed"))
+        c["wkv"] = P.Param(
+            jnp.zeros((batch, cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+            ("batch", "heads", None, None),
+        )
+    if cfg.mlp_type == "relu_sq":
+        c["cm_shift"] = P.Param(
+            jnp.zeros((batch, 1, cfg.d_model), dtype), ("batch", None, "embed")
+        )
+    return c
+
+
+def block_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    pos: int,
+    mode: str = "train",  # train | prefill | decode
+    cache: Optional[dict] = None,
+    t: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    enc_kv: Optional[tuple] = None,
+):
+    """Returns (x, cache_out, aux_loss).
+
+    mode="train":   cache_out = {}.
+    mode="prefill": cache_out holds full-sequence K/V (B,S,...) and final
+                    recurrent states — the caller packs them into a cache.
+    mode="decode":  cache is the packed cache; cache_out is its update.
+    """
+    kind = cfg.mixer_kind(pos)
+    window = cfg.window_for_layer(pos)
+    decode = mode == "decode"
+    prefill = mode == "prefill"
+    cache_out: dict = {}
+    x = _lc(x, ("batch", "seq", None))  # residual stream: batch over data
+    h = L.rms_norm(x, p["ln1"])
+    if kind == "attn":
+        if cfg.attention == "mla":
+            mla_cache = (cache["ckv"], cache["krope"]) if decode else None
+            out, kvc = L.mla_apply(p["mixer"], h, cfg, positions=positions, cache=mla_cache, t=t)
+            if decode or prefill:
+                cache_out["ckv"], cache_out["krope"] = kvc
+        else:
+            kv_cache = (cache["k"], cache["v"]) if decode else None
+            out, kvc = L.gqa_apply(
+                p["mixer"], h, cfg, window, positions=positions,
+                kv_cache=kv_cache, t=t, causal=cfg.causal,
+            )
+            if decode or prefill:
+                cache_out["k"], cache_out["v"] = kvc
+    elif kind == "mamba":
+        st = {"conv": cache["conv"], "ssm": cache["ssm"]} if decode else None
+        out, st_new = SSM.mamba_apply(p["mixer"], h, cfg, state=st, return_state=prefill)
+        if decode or prefill:
+            cache_out.update(st_new)
+    else:  # rwkv6
+        st = {"shift": cache["shift"], "wkv": cache["wkv"]} if decode else None
+        out, st_new = SSM.rwkv6_time_mix(p["mixer"], h, cfg, state=st, return_state=prefill)
+        if decode or prefill:
+            cache_out.update(st_new)
+    x = x + out
+
+    if cfg.family == "audio" and "cross" in p:
+        hc = L.rms_norm(x, p["ln_cross"])
+        if decode:
+            ekv = (cache["cross_k"], cache["cross_v"])
+        else:
+            ekv = enc_kv
+        x = x + L.cross_attention_apply(p["cross"], hc, ekv[0], ekv[1], cfg)
+        if prefill:
+            cache_out["cross_k"], cache_out["cross_v"] = ekv
+        elif decode:
+            cache_out["cross_k"], cache_out["cross_v"] = cache["cross_k"], cache["cross_v"]
+
+    h2 = L.rms_norm(x, p["ln2"])
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.ffn_kind(pos) == "moe":
+        out2, aux = MOE.moe_apply(p["ffn"], h2, cfg)
+    elif cfg.mlp_type == "relu_sq":
+        st = {"shift": cache["cm_shift"]} if decode else None
+        out2, st_new = SSM.rwkv_channel_mix(p["ffn"], h2, cfg, state=st, return_state=prefill)
+        if decode or prefill:
+            cache_out["cm_shift"] = st_new["shift"]
+    else:
+        out2 = L.mlp_apply(p["ffn"], h2, cfg)
+    return x + out2, cache_out, aux
+
+
+# ---------------------------------------------------------------------------
+# stack
+# ---------------------------------------------------------------------------
+
+
+def stack_init(rng, cfg: ModelConfig, cross_attention: bool = False) -> list:
+    """list[pos] of Param trees with leaves stacked over num_groups."""
+    groups = []
+    for pos in range(cfg.group_size):
+        rng, sub = jax.random.split(rng)
+        proto = block_init(sub, cfg, pos, cross_attention)
+        keys = jax.random.split(sub, cfg.num_groups)
+        vals = jax.vmap(
+            lambda k: P.values(block_init(k, cfg, pos, cross_attention))
+        )(keys)
+        axs = jax.tree.map(lambda pr: ("layers",) + pr.axes, proto, is_leaf=P.is_param)
+        groups.append(P.merge(vals, axs))
+    return groups
+
+
+def stack_cache_init(cfg: ModelConfig, batch: int, seq: int, dtype) -> list:
+    """list[pos] of Param trees stacked over num_groups."""
+    out = []
+    for pos in range(cfg.group_size):
+        proto = block_cache_init(cfg, pos, batch, seq, dtype)
+        vals = jax.tree.map(
+            lambda pr: jnp.broadcast_to(pr.value[None], (cfg.num_groups,) + pr.value.shape),
+            proto,
+            is_leaf=P.is_param,
+        )
+        axs = jax.tree.map(lambda pr: ("layers",) + pr.axes, proto, is_leaf=P.is_param)
+        out.append(P.merge(vals, axs))
+    return out
+
+
+def stack_apply(
+    groups: list,
+    x: jax.Array,
+    cfg: ModelConfig,
+    mode: str = "train",
+    cache: Optional[list] = None,
+    t: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    enc_kv: Optional[list] = None,
+    remat: Optional[bool] = None,
+):
+    """Run all layers.  groups: value trees (no Param wrappers) stacked over
+    num_groups.  Returns (x, cache_out, total_aux); cache_out is a
+    list[pos] of dicts with (G, ...) stacked leaves (empty dicts in train
+    mode)."""
+    remat = (cfg.remat if remat is None else remat) and mode == "train"
+    gs = cfg.group_size
+
+    def group_body(x, group_params, group_cache, group_enc_kv):
+        aux_total = jnp.zeros((), jnp.float32)
+        new_group_cache = []
+        for pos in range(gs):
+            c = group_cache[pos] if group_cache is not None else None
+            ekv = group_enc_kv[pos] if group_enc_kv is not None else None
+            x, nc, aux = block_apply(
+                group_params[pos], x, cfg, pos, mode=mode,
+                cache=c, t=t, positions=positions, enc_kv=ekv,
+            )
+            aux_total = aux_total + aux
+            new_group_cache.append(nc)
+        return x, new_group_cache, aux_total
+
+    if cfg.stack_mode == "unroll":
+        collect = cache is not None or mode == "prefill"
+        aux_total = jnp.zeros((), jnp.float32)
+        new_cache = [dict() for _ in range(gs)] if collect else None
+        fn = jax.checkpoint(group_body) if remat else group_body
+        for g in range(cfg.num_groups):
+            gp = [jax.tree.map(lambda a: a[g], groups[pos]) for pos in range(gs)]
+            gc = (
+                [jax.tree.map(lambda a: a[g], cache[pos]) for pos in range(gs)]
+                if cache is not None
+                else None
+            )
+            gekv = (
+                [jax.tree.map(lambda a: a[g], enc_kv[pos]) for pos in range(gs)]
+                if enc_kv is not None
+                else None
+            )
+            x, ncs, aux = fn(x, gp, gc, gekv)
+            aux_total = aux_total + aux
+            if collect:
+                for pos in range(gs):
+                    for k2, v2 in ncs[pos].items():
+                        new_cache[pos].setdefault(k2, []).append(v2)
+        if collect:
+            new_cache = [
+                {k2: jnp.stack(v2) for k2, v2 in nc.items()} for nc in new_cache
+            ]
+        return x, new_cache, aux_total
+
+    # scan mode
+    def scan_body(carry, xs):
+        x, aux_total = carry
+        gp, gc, gekv = xs
+        fn = jax.checkpoint(group_body) if remat else group_body
+        x, nc, aux = fn(x, gp, gc, gekv)
+        return (x, aux_total + aux), nc
+
+    xs = (groups, cache, enc_kv)
+    (x, aux_total), new_cache = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, new_cache, aux_total

@@ -1,0 +1,2 @@
+"""Optimizers + distributed-optimization tricks (AdamW, int8 grad compression)."""
+from repro.optim import adamw, compression

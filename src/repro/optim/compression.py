@@ -1,0 +1,72 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Large-scale data parallelism spends its collective budget on gradient
+all-reduce.  This module provides:
+
+  * ``quantize / dequantize`` — per-tensor symmetric int8 with a f32
+    scale (4x byte reduction vs f32, 2x vs bf16);
+  * ``ef_compress`` — error-feedback wrapper: the quantization residual is
+    carried to the next step, which keeps SGD/Adam convergence (Karimireddy
+    et al., 2019);
+  * ``compressed_psum`` — a shard_map-compatible all-reduce that sums int8
+    payloads in int32 and dequantizes once, for pure-DP meshes where the
+    gradient exchange is explicit (train/loop.py wires it when mesh has
+    only data axes).  Under GSPMD meshes the all-reduce is compiler-
+    inserted, so compression there is future work (documented limitation).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (f32/bf16) -> (int8 payload, f32 scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(grads, error_buf):
+    """Error-feedback int8 compression of a gradient pytree.
+
+    Returns (compressed-then-decompressed grads, new error buffer).  The
+    returned grads are what the *receiver* would see after the compressed
+    exchange; error_buf carries the per-tensor residual.
+    """
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize(corrected)
+        deq = dequantize(q, s)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error_buf)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in outs]), tdef.unflatten([o[1] for o in outs])
+
+
+def init_error_buf(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8-compressed all-reduce inside shard_map: each shard quantizes,
+    the sum runs in int32 (no overflow for <= 2^23 shards), and the max
+    scale is shared so dequantization is consistent."""
+    q, scale = quantize(x)
+    scale_max = jax.lax.pmax(scale, axis_name)
+    # requantize against the shared scale so the integer sum is coherent
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale_max), -127, 127
+    ).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale_max

@@ -1,0 +1,93 @@
+"""Parameters with logical sharding axes (MaxText-style logical annotations).
+
+Every parameter is created as ``Param(value, axes)`` where ``axes`` names
+one logical axis per array dimension (e.g. ("embed", "heads", "head_dim")).
+``sharding.resolve_rules`` maps logical names to physical mesh axes with
+divisibility-aware fallback, giving per-tensor PartitionSpecs without
+scattering mesh knowledge through model code.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Param:
+    """A parameter value + its logical axis names.
+
+    Registered as a pytree node with ``axes`` as *static* aux data, so
+    Param trees pass through jit / vmap / eval_shape: transformations see
+    only ``value`` while the axes ride along in the tree structure.
+    """
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value: Any, axes: Tuple[str, ...]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Param(shape={shape}, axes={self.axes})"
+
+    def __eq__(self, other):
+        return (
+            isinstance(other, Param)
+            and other.axes == self.axes
+            and other.value is self.value
+        )
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, children: Param(children[0], axes),
+)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def values(tree):
+    """Strip axes: tree of Param -> tree of arrays."""
+    return jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+
+
+def axes(tree):
+    """Strip values: tree of Param -> tree of axis tuples."""
+    return jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+
+
+def merge(value_tree, axes_tree):
+    return jax.tree.map(
+        lambda v, a: Param(v, a), value_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(s, str) for s in x),
+    )
+
+
+def init_normal(rng, shape, axes_, scale=None, dtype=jnp.float32) -> Param:
+    scale = scale if scale is not None else (1.0 / max(shape[0], 1)) ** 0.5
+    return Param(jax.random.normal(rng, shape, dtype) * scale, tuple(axes_))
+
+
+def init_zeros(shape, axes_, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(shape, dtype), tuple(axes_))
+
+
+def init_ones(shape, axes_, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), tuple(axes_))
+
+
+def abstract(tree, dtype=None):
+    """Param tree -> Param tree of ShapeDtypeStructs (for .lower without
+    allocating full-scale weights)."""
+
+    def f(p: Param) -> Param:
+        v = p.value
+        dt = dtype or v.dtype
+        return Param(jax.ShapeDtypeStruct(v.shape, dt), p.axes)
+
+    return jax.tree.map(f, tree, is_leaf=is_param)

@@ -1,0 +1,3 @@
+"""Serving engines: streaming GNN inference + batched LM prefill/decode."""
+from repro.serve.gnn_engine import GNNEngine
+from repro.serve.engine import LMServer, ServeConfig

@@ -1,0 +1,72 @@
+"""LM serving engine: batched prefill + decode with a static KV cache.
+
+Request flow: requests accumulate into fixed-size batches (padding short
+prompts left-aligned), one compiled ``prefill`` builds the cache, then the
+compiled ``decode_step`` runs autoregressively (greedy).  Static shapes
+throughout — the serving analogue of the GNN engine's bucketed padding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    prompt_len: int = 64  # padded prompt length
+    cache_len: int = 256
+    max_new_tokens: int = 32
+
+
+class LMServer:
+    def __init__(self, params, cfg: ModelConfig, serve_cfg: ServeConfig):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = serve_cfg
+        self._prefill = jax.jit(
+            lambda p, b: lm.prefill(p, b, cfg, serve_cfg.cache_len)
+        )
+        self._decode = jax.jit(
+            lambda p, c, tok, t: lm.decode_step(p, c, tok, t, cfg),
+            donate_argnums=(1,),
+        )
+
+    def generate(self, prompts: List[np.ndarray], extras: Optional[dict] = None):
+        """prompts: list of int32 arrays (<= prompt_len).  Greedy decode.
+        Returns (generated (B, max_new), stats)."""
+        scfg = self.scfg
+        b = len(prompts)
+        assert b <= scfg.max_batch
+        toks = np.zeros((scfg.max_batch, scfg.prompt_len), np.int32)
+        for i, pr in enumerate(prompts):
+            toks[i, -len(pr) :] = pr  # left-pad with 0 (simplification)
+        batch = {"tokens": jnp.asarray(toks)}
+        if extras:
+            batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+        t0 = time.perf_counter()
+        cache, last_logits, t = self._prefill(self.params, batch)
+        last_logits.block_until_ready()
+        prefill_s = time.perf_counter() - t0
+        out = np.zeros((scfg.max_batch, scfg.max_new_tokens), np.int32)
+        tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)[:, None]
+        t0 = time.perf_counter()
+        for i in range(scfg.max_new_tokens):
+            out[:, i] = np.asarray(tok[:, 0])
+            logits, cache = self._decode(self.params, cache, tok, t)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            t = t + 1
+        jax.block_until_ready(cache)
+        decode_s = time.perf_counter() - t0
+        return out[:b], {
+            "prefill_s": prefill_s,
+            "decode_s_per_token": decode_s / scfg.max_new_tokens,
+        }

@@ -1,0 +1,122 @@
+"""GNN serving engine — the paper's real-time inference mode.
+
+Raw COO graphs are streamed in consecutively with *zero preprocessing*:
+the engine pads each graph into a (N_pad, E_pad) bucket (static shapes for
+the compiled program; the paper's analogue is the fixed on-chip buffer
+size), converts COO->CSC *on device inside the compiled step* (the
+paper's on-chip converter), and runs any registered model through the one
+generic message-passing program.
+
+Two modes, both measured by benchmarks/bench_fig7_latency.py:
+  * ``infer_stream``  — batch-size-1, per-graph latency (paper Fig. 7)
+  * ``infer_batched`` — padded batching (the TPU-efficient mode)
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Iterable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph as G
+from repro.gnn import models as M
+
+DEFAULT_BUCKETS: Sequence[tuple] = ((32, 96), (64, 192), (128, 384), (256, 768))
+
+
+class GNNEngine:
+    def __init__(
+        self,
+        cfg: M.GNNConfig,
+        params: dict,
+        buckets: Sequence[tuple] = DEFAULT_BUCKETS,
+        eigvec_dim: bool = None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.buckets = sorted(buckets)
+        self._compiled = {}
+
+    def _bucket_for(self, n: int, e: int) -> tuple:
+        for nb, eb in self.buckets:
+            if n <= nb and e <= eb:
+                return nb, eb
+        raise ValueError(f"graph ({n},{e}) exceeds largest bucket {self.buckets[-1]}")
+
+    def _fn(self, bucket: tuple):
+        if bucket not in self._compiled:
+
+            @jax.jit
+            def run(params, g: G.Graph, eigvec):
+                return M.apply(params, g, self.cfg, eigvec=eigvec)
+
+            self._compiled[bucket] = run
+        return self._compiled[bucket]
+
+    def infer_stream(self, graphs: Iterable[tuple], with_eigvec: bool = False):
+        """graphs: iterable of raw (senders, receivers, node_feat, edge_feat
+        [, label]) tuples.  Returns (outputs, per-graph latencies seconds).
+        The first call per bucket includes compilation (excluded from
+        latency, reported separately)."""
+        outs: List[np.ndarray] = []
+        lats: List[float] = []
+        compile_time = 0.0
+        for graph in graphs:
+            s, r, nf, ef = graph[:4]
+            nb, eb = self._bucket_for(nf.shape[0], len(s))
+            g = G.from_numpy(s, r, nf, ef, n_pad=nb, e_pad=eb)
+            eig = self._eigvec(s, r, nf.shape[0], nb) if with_eigvec else None
+            fn = self._fn((nb, eb))
+            key = ((nb, eb), with_eigvec)
+            if key not in getattr(self, "_warm", set()):
+                t0 = time.perf_counter()
+                fn(self.params, g, eig)[0].block_until_ready()
+                compile_time += time.perf_counter() - t0
+                self._warm = getattr(self, "_warm", set()) | {key}
+            t0 = time.perf_counter()
+            out = fn(self.params, g, eig)
+            out = jax.block_until_ready(out)
+            lats.append(time.perf_counter() - t0)
+            outs.append(np.asarray(out[:1]))
+        return outs, np.asarray(lats), compile_time
+
+    def infer_batched(self, graphs: Sequence[tuple], batch_size: int,
+                      n_pad: int, e_pad: int, with_eigvec: bool = False):
+        """Padded-batch mode.  Returns (outputs (n_graphs, out), seconds/graph)."""
+        fn = self._fn((n_pad, e_pad, batch_size))
+        outs = []
+        total = 0.0
+        for i in range(0, len(graphs), batch_size):
+            chunk = graphs[i : i + batch_size]
+            gs = [(g[0], g[1], g[2], g[3]) for g in chunk]
+            g = G.batch_graphs(gs, n_pad=n_pad, e_pad=e_pad)
+            eig = None
+            if with_eigvec:
+                eig = jnp.zeros((n_pad,), jnp.float32)
+            if i == 0:
+                fn(self.params, g, eig)[0].block_until_ready()  # compile
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(fn(self.params, g, eig))
+            total += time.perf_counter() - t0
+            outs.append(np.asarray(out[: len(chunk)]))
+        return np.concatenate(outs), total / len(graphs)
+
+    def _eigvec(self, s, r, n, n_pad):
+        """First non-trivial Laplacian eigenvector — DGN's *input* (the
+        paper passes precomputed eigenvectors as a parameter; for synthetic
+        streams we compute it on the host as part of data generation)."""
+        import numpy.linalg as la
+
+        a = np.zeros((n, n))
+        a[r, s] = 1.0
+        a = np.maximum(a, a.T)
+        d = np.diag(a.sum(1))
+        lap = d - a
+        w, v = la.eigh(lap)
+        vec = v[:, min(1, v.shape[1] - 1)]
+        out = np.zeros((n_pad,), np.float32)
+        out[:n] = vec
+        return jnp.asarray(out)

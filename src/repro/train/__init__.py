@@ -1,0 +1,2 @@
+"""Fault-tolerant training loop."""
+from repro.train.loop import train, make_train_step, LoopConfig

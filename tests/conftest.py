@@ -1,0 +1,25 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches see
+1 CPU device; only launch/dryrun.py (and the subprocess-based distributed
+tests) force a placeholder device count."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_molecule_batch(rng, n_graphs=4, n_pad=80, e_pad=160, feat=9, edge=3):
+    from repro.core.graph import batch_graphs
+
+    gs = []
+    for _ in range(n_graphs):
+        n = int(rng.integers(5, 18))
+        e = int(rng.integers(n, 2 * n))
+        s = rng.integers(0, n, e).astype(np.int32)
+        r = rng.integers(0, n, e).astype(np.int32)
+        nf = rng.normal(size=(n, feat)).astype(np.float32)
+        ef = rng.normal(size=(e, edge)).astype(np.float32)
+        gs.append((s, r, nf, ef))
+    return batch_graphs(gs, n_pad=n_pad, e_pad=e_pad)

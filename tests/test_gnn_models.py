@@ -1,0 +1,90 @@
+"""End-to-end GNN correctness: every paper model cross-checked against an
+independent dense-adjacency oracle (the paper's PyTorch cross-check
+analogue), plus engine behaviour (bucketing, batch-vs-stream parity)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import batch_graphs
+from repro.gnn import apply, apply_dense, init, paper_config
+from tests.conftest import random_molecule_batch
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rel_err(a, b):
+    return float((jnp.abs(a - b) / (jnp.abs(b) + 1.0)).max())
+
+
+@pytest.mark.parametrize(
+    "model,vn",
+    [("gcn", False), ("gin", False), ("gin", True), ("gat", False),
+     ("pna", False), ("dgn", False)],
+)
+def test_model_matches_dense_oracle(model, vn, rng):
+    g = random_molecule_batch(rng)
+    cfg = paper_config(model, virtual_node=vn)
+    params = init(KEY, cfg)
+    eig = jnp.asarray(rng.normal(size=(g.num_nodes,)), jnp.float32)
+    out = apply(params, g, cfg, eigvec=eig)
+    want = apply_dense(params, g, cfg, eigvec=eig)
+    # unnormalized GNNs amplify magnitudes across layers; compare relative
+    assert _rel_err(out[:4], want[:4]) < 1e-4, (model, vn)
+
+
+@pytest.mark.parametrize("model", ["gin", "gat"])
+def test_model_kernel_mode_matches_reference_mode(model, rng):
+    """Pallas (interpret) engine path == pure-jnp path."""
+    g = random_molecule_batch(rng)
+    cfg_ref = paper_config(model)
+    cfg_k = paper_config(model, kernel_mode="kernel")
+    params = init(KEY, cfg_ref)
+    out_ref = apply(params, g, cfg_ref)
+    out_k = apply(params, g, cfg_k)
+    assert _rel_err(out_k[:4], out_ref[:4]) < 1e-3
+
+
+def test_node_level_task_output_shape(rng):
+    g = random_molecule_batch(rng)
+    cfg = paper_config("gcn", task="node", out_dim=7)
+    params = init(KEY, cfg)
+    out = apply(params, g, cfg)
+    assert out.shape == (g.num_nodes, 7)
+    assert not bool(jnp.isnan(out).any())
+
+
+def test_engine_stream_matches_direct_apply(rng):
+    from repro.data.pipeline import MOLHIV, MoleculeStream
+    from repro.serve.gnn_engine import GNNEngine
+
+    cfg = paper_config("gin")
+    params = init(KEY, cfg)
+    eng = GNNEngine(cfg, params)
+    graphs = MoleculeStream(MOLHIV, seed=3).take(5)
+    outs, lats, _ = eng.infer_stream([g[:4] for g in graphs])
+    assert len(outs) == 5 and (lats > 0).all()
+    # cross-check graph 0 against direct apply on a fresh padded batch
+    s, r, nf, ef, _ = graphs[0]
+    g0 = batch_graphs([(s, r, nf, ef)], n_pad=eng._bucket_for(nf.shape[0], len(s))[0],
+                      e_pad=eng._bucket_for(nf.shape[0], len(s))[1])
+    direct = apply(params, g0, cfg)
+    np.testing.assert_allclose(outs[0][0], np.asarray(direct[0]), rtol=1e-4, atol=1e-5)
+
+
+def test_gnn_permutation_of_graph_nodes_invariance(rng):
+    """Graph-level output must be invariant to node relabeling."""
+    n, e = 12, 30
+    s = rng.integers(0, n, e).astype(np.int32)
+    r = rng.integers(0, n, e).astype(np.int32)
+    nf = rng.normal(size=(n, 9)).astype(np.float32)
+    ef = rng.normal(size=(e, 3)).astype(np.float32)
+    cfg = paper_config("gin")
+    params = init(KEY, cfg)
+    g1 = batch_graphs([(s, r, nf, ef)], n_pad=16, e_pad=40)
+    perm = rng.permutation(n).astype(np.int32)
+    inv = np.argsort(perm).astype(np.int32)
+    g2 = batch_graphs([(inv[s], inv[r], nf[perm], ef)], n_pad=16, e_pad=40)
+    o1 = apply(params, g1, cfg)[0]
+    o2 = apply(params, g2, cfg)[0]
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,128 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes, dtypes and reduction ops."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _sorted_ids(e, n, pad_frac=0.1):
+    ids = np.sort(RNG.integers(0, n, e)).astype(np.int32)
+    k = int(e * pad_frac)
+    if k:
+        ids[-k:] = n  # padding tail
+    return ids
+
+
+@pytest.mark.parametrize("op", ["sum", "mean", "sqsum", "max", "min"])
+@pytest.mark.parametrize(
+    "e,n,f", [(64, 16, 8), (300, 70, 96), (512, 128, 128), (1000, 333, 40)]
+)
+def test_segment_reduce_matches_oracle(op, e, n, f):
+    ids = _sorted_ids(e, n)
+    vals = RNG.normal(size=(e, f)).astype(np.float32)
+    got = ops.segment_reduce(jnp.asarray(vals), jnp.asarray(ids), n, op, mode="kernel")
+    want = ref.segment_reduce_sorted_ref(jnp.asarray(vals), jnp.asarray(ids), n, op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_reduce_dtypes(dtype):
+    ids = _sorted_ids(256, 64)
+    vals = jnp.asarray(RNG.normal(size=(256, 32)), dtype)
+    got = ops.segment_reduce(vals, jnp.asarray(ids), 64, "sum", mode="kernel")
+    want = ref.segment_reduce_sorted_ref(vals, jnp.asarray(ids), 64, "sum")
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_segment_reduce_empty_segments_are_zero():
+    ids = jnp.asarray([0, 0, 5, 5, 5], jnp.int32)
+    vals = jnp.ones((5, 4), jnp.float32)
+    for op in ("sum", "mean", "max", "min"):
+        out = ops.segment_reduce(vals, ids, 8, op, mode="kernel")
+        assert float(jnp.abs(out[1:5]).max()) == 0.0, op
+        assert float(jnp.abs(out[6:]).max()) == 0.0, op
+
+
+@pytest.mark.parametrize("act", ["relu", "gelu", "none"])
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (200, 130, 50), (128, 256, 384)])
+def test_node_mlp_matches_oracle(act, m, k, n):
+    x = RNG.normal(size=(m, k)).astype(np.float32)
+    w = (RNG.normal(size=(k, n)) * 0.1).astype(np.float32)
+    b = RNG.normal(size=(n,)).astype(np.float32)
+    got = ops.node_mlp(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), act, mode="kernel")
+    want = ref.node_mlp_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("h", [1, 4])
+def test_edge_softmax_matches_oracle(h):
+    ids = _sorted_ids(300, 70)
+    logits = (RNG.normal(size=(300, h)) * 3).astype(np.float32)
+    got = ops.edge_softmax(jnp.asarray(logits), jnp.asarray(ids), 70, mode="kernel")
+    want = ref.edge_softmax_ref(jnp.asarray(logits), jnp.asarray(ids), 70)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_edge_softmax_sums_to_one():
+    ids = _sorted_ids(300, 70, pad_frac=0.0)
+    logits = (RNG.normal(size=(300, 2)) * 3).astype(np.float32)
+    w = ops.edge_softmax(jnp.asarray(logits), jnp.asarray(ids), 70, mode="kernel")
+    sums = ref.segment_reduce_sorted_ref(w, jnp.asarray(ids), 70, "sum")
+    counts = ref.segment_reduce_sorted_ref(jnp.ones_like(w), jnp.asarray(ids), 70, "sum")
+    np.testing.assert_allclose(
+        np.asarray(sums), np.asarray((counts > 0).astype(np.float32)), atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("window", [None, 64])
+def test_flash_attention_matches_oracle(hq, hkv, window):
+    b, s, d = 2, 256, 64
+    q = RNG.normal(size=(b, hq, s, d)).astype(np.float32)
+    k = RNG.normal(size=(b, hkv, s, d)).astype(np.float32)
+    v = RNG.normal(size=(b, hkv, s, d)).astype(np.float32)
+    got = ops.flash_attention(
+        *map(jnp.asarray, (q, k, v)), causal=True, window=window, mode="kernel"
+    )
+    want = ref.flash_attention_ref(
+        *map(jnp.asarray, (q, k, v)), causal=True, window=window
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_blocked_attention_jnp_matches_flash_ref():
+    """models.layers.blocked_attention (the dry-run path) against the
+    kernel oracle: same math, different tiling."""
+    from repro.models.config import ModelConfig
+    from repro.models.layers import blocked_attention
+
+    b, s, hq, hkv, d = 2, 128, 4, 2, 32
+    cfg = ModelConfig(attn_chunk=32)
+    q = jnp.asarray(RNG.normal(size=(b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), jnp.float32)
+    got = blocked_attention(q, k, v, cfg, window=0)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=True,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+    # sliding window variant
+    got_w = blocked_attention(q, k, v, cfg, window=48)
+    want_w = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=True,
+        window=48,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got_w), np.asarray(want_w), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,78 @@
+"""The Fig. 9 scheduling study: simulator invariants + the paper's
+measured speed-up bands on the same synthetic sweep, + the virtual-node
+experiment (Fig. 6)."""
+import numpy as np
+import pytest
+
+from repro.core.pipeline_sim import (
+    PipelineCosts,
+    makespan_fixed,
+    makespan_non_pipelined,
+    makespan_streaming,
+    random_degree_graph,
+    simulate,
+    virtual_node_graph,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def test_streaming_never_slower_than_fixed_never_slower_than_non():
+    for _ in range(20):
+        deg = RNG.poisson(RNG.uniform(1, 10), size=200)
+        c = PipelineCosts()
+        non = makespan_non_pipelined(deg, c)
+        fix = makespan_fixed(deg, c)
+        stream = makespan_streaming(deg, c)
+        assert stream <= fix + 1e-9 <= non + 1e-9
+
+
+def test_streaming_lower_bound_is_stage_max():
+    """Streaming cannot beat max(total NE, total MP) — the busy-stage bound."""
+    deg = RNG.poisson(4, size=300)
+    c = PipelineCosts()
+    stream = makespan_streaming(deg, c)
+    lower = max(c.c_ne * len(deg), float(np.sum(c.t_mp(deg))))
+    assert stream >= lower - 1e-9
+    assert stream <= lower * 1.5  # and should be near it
+
+
+def test_paper_speedup_bands_on_synthetic_sweep():
+    """Fig. 9(a): fixed/non in ~1.2-1.5x, streaming/fixed in ~1.15-1.37x,
+    streaming/non in ~1.53-1.92x over the (avg degree x %large) sweep."""
+    ratios = {"fn": [], "sf": [], "sn": []}
+    for avg_deg in (2, 3, 4):
+        for pct in (0.01, 0.05, 0.1):
+            deg = random_degree_graph(RNG, 2000, avg_deg, pct)
+            r = simulate(deg)
+            ratios["fn"].append(r["fixed_over_non"])
+            ratios["sf"].append(r["streaming_over_fixed"])
+            ratios["sn"].append(r["streaming_over_non"])
+    assert 1.15 <= np.mean(ratios["fn"]) <= 1.55, np.mean(ratios["fn"])
+    assert 1.10 <= np.mean(ratios["sf"]) <= 1.40, np.mean(ratios["sf"])
+    assert 1.45 <= np.mean(ratios["sn"]) <= 2.00, np.mean(ratios["sn"])
+
+
+def test_virtual_node_hidden_when_early():
+    """Fig. 6: the streaming pipeline absorbs the virtual node iff it is
+    emitted early; last-position VN leaves an un-hidden tail."""
+    c = PipelineCosts()
+    deg_first = virtual_node_graph(RNG, 400, avg_degree=3, vn_position="first")
+    deg_last = virtual_node_graph(RNG, 400, avg_degree=3, vn_position="last")
+    s_first = makespan_streaming(deg_first, c)
+    s_last = makespan_streaming(deg_last, c)
+    assert s_first < s_last  # early VN overlaps with other nodes' NE
+    # and streaming with early VN stays close to the no-VN busy bound
+    base = max(c.c_ne * 400, float(np.sum(c.t_mp(deg_first))))
+    assert s_first <= base * 1.25
+
+
+def test_degree_imbalance_helps_streaming():
+    """The paper's observed trend: more imbalance (NE ~ MP) => larger
+    streaming gain; MP-dominated graphs degrade streaming toward fixed."""
+    c = PipelineCosts()
+    balanced = random_degree_graph(RNG, 1000, 3, 0.02)  # NE ~ mean MP
+    heavy = random_degree_graph(RNG, 1000, 20, 0.3)  # MP dominates
+    r_bal = simulate(balanced, c)
+    r_heavy = simulate(heavy, c)
+    assert r_bal["streaming_over_fixed"] > r_heavy["streaming_over_fixed"]
