@@ -11,7 +11,7 @@ Requirements at 1000-node scale (DESIGN.md §8):
   * **elastic restore** — arrays are saved with their *logical axes*; on
     restore they are re-laid-out for whatever mesh the job restarts with
     (different data-axis size after excluding failed hosts), via
-    ``sharding.tree_shardings`` + ``jax.device_put``.
+    ``runtime.partitioning.tree_shardings`` + ``jax.device_put``.
 
 Format: one ``.npy`` per leaf (portable, partial-read friendly) plus a
 json manifest holding the tree structure, dtypes, logical axes and step.
@@ -151,7 +151,7 @@ class CheckpointManager:
             jax.tree_util.tree_structure(template), leaves
         )
         if mesh is not None and manifest.get("axes"):
-            from repro import sharding as SH
+            from repro.runtime import partitioning as SH
 
             axes = manifest["axes"]
             flat_axes = {k: tuple(v) if v is not None else None for k, v in axes.items()}

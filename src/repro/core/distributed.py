@@ -1,130 +1,18 @@
-"""Multi-chip sharded message passing — the large-graph extension (§4.6) at scale.
-
-The paper stores node/message buffers in DRAM and hides latency with a
-prefetcher when a graph exceeds on-chip memory.  At TPU-pod scale the
-analogous limit is a graph exceeding one chip's HBM, and the answer is
-*node sharding*: node rows are partitioned across a mesh axis and messages
-whose source and destination live on different shards are exchanged with
-collectives.  Zero preprocessing is preserved — edge routing is computed on
-device from the raw COO stream.
-
-Two exchange strategies (both built on core.scatter_gather):
-
-  * ``allgather_mp``  — all-gather node embeddings, compute local edges'
-    messages locally, reduce into local destinations.  Comm = O(N*F) per
-    layer; simple and bandwidth-optimal for dense-ish graphs.
-  * ``alltoall_mp``   — GenGNN's merged scatter-gather lifted to chip level:
-    each shard sorts its edges by destination shard, packs messages into
-    per-destination capacity slots (dispatch_to_slots), exchanges with a
-    single all-to-all, and folds received messages into its local O(N/P)
-    aggregate buffer.  Comm = O(E/P * F) — wins when E/P << N.
-
-Both run inside ``shard_map`` over one mesh axis and are exercised by the
-multi-pod dry-run as well as by an 8-virtual-device integration test.
-"""
+"""Deprecation shim — the sharded message-passing collectives moved to
+``repro.runtime.partitioning`` (same functions, now built on the
+version-portable ``repro.runtime.compat.shard_map``)."""
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable
+import warnings
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from repro.runtime.partitioning import (  # noqa: F401
+    allgather_mp_local,
+    alltoall_mp_local,
+    make_sharded_mp,
+)
 
-from repro.core import scatter_gather as sg
-
-
-def _local_segment_sum(messages, dst_local, n_local):
-    return sg.segment_reduce(messages, dst_local, n_local, "sum")
-
-
-def allgather_mp_local(
-    x_local: jax.Array,
-    src: jax.Array,
-    dst: jax.Array,
-    edge_mask: jax.Array,
-    phi: Callable[[jax.Array], jax.Array],
-    axis_name: str,
-) -> jax.Array:
-    """Per-shard body: all-gather x, aggregate messages for local dst rows.
-
-    x_local: (N/P, F). src/dst: (E/P,) *global* node ids of local edges.
-    Returns (N/P, F') aggregated messages for this shard's nodes.
-    """
-    n_local = x_local.shape[0]
-    idx = jax.lax.axis_index(axis_name)
-    x_global = jax.lax.all_gather(x_local, axis_name, axis=0, tiled=True)
-    msgs = phi(jnp.take(x_global, src, axis=0))
-    msgs = jnp.where(edge_mask[:, None], msgs, 0.0)
-    dst_local = dst - idx * 0  # dst is global; map into local frame below
-    # Edges may target any shard; keep only this shard's destinations and
-    # psum-scatter the rest?  No: each edge is owned by exactly one shard,
-    # but its destination may be remote.  Route by segment-reducing into the
-    # *global* frame and reduce-scattering rows back to their owners.
-    agg_global = sg.segment_reduce(msgs, dst, n_local * jax.lax.axis_size(axis_name), "sum")
-    agg_local = jax.lax.psum_scatter(agg_global, axis_name, scatter_dimension=0, tiled=True)
-    del dst_local
-    return agg_local
-
-
-def alltoall_mp_local(
-    x_local: jax.Array,
-    src_local: jax.Array,
-    dst: jax.Array,
-    edge_mask: jax.Array,
-    phi: Callable[[jax.Array], jax.Array],
-    axis_name: str,
-    capacity: int,
-) -> jax.Array:
-    """Per-shard body for the all-to-all exchange.
-
-    Assumes edges live on the shard that owns their *source* (CSR ownership,
-    which is free: the producer of a message owns it — exactly the paper's
-    scatter side).  src_local: (E/P,) local row ids; dst: (E/P,) global ids.
-
-    capacity: max messages any (src-shard -> dst-shard) pair may carry per
-    layer; overflow drops (GShard semantics) — sized by the caller from the
-    degree distribution, and asserted in tests.
-    """
-    p = jax.lax.axis_size(axis_name)
-    n_local = x_local.shape[0]
-    msgs = phi(jnp.take(x_local, src_local, axis=0))
-    msgs = jnp.where(edge_mask[:, None], msgs, 0.0)
-    dst_shard = dst // n_local
-    # carry destination-local row id alongside the payload so the receiver
-    # can fold messages into its O(N/P) buffer (merged scatter-gather).
-    payload = jnp.concatenate([msgs, (dst % n_local).astype(msgs.dtype)[:, None]], axis=-1)
-    slots, _, _ = sg.dispatch_to_slots(
-        payload, dst_shard, p, capacity, valid=edge_mask
-    )  # (P, capacity, F+1)
-    received = jax.lax.all_to_all(slots, axis_name, split_axis=0, concat_axis=0, tiled=True)
-    rmsg = received[..., :-1].reshape(p * capacity, -1)
-    rdst = received[..., -1].reshape(p * capacity).astype(jnp.int32)
-    # zero-payload slots reduce harmlessly into row 0
-    return sg.segment_reduce(rmsg, rdst, n_local, "sum")
-
-
-def make_sharded_mp(
-    mesh, axis: str, phi: Callable, strategy: str = "allgather", capacity: int = 0
-):
-    """Build a shard_map-wrapped message-passing aggregate step.
-
-    Returns fn(x, src, dst, edge_mask) -> (N, F') with x sharded on axis 0
-    and edges sharded on axis 0 (ownership: 'allgather' -> any shard,
-    'alltoall' -> source shard, src given shard-locally).
-    """
-    if strategy == "allgather":
-        body = partial(allgather_mp_local, phi=phi, axis_name=axis)
-        in_specs = (P(axis, None), P(axis), P(axis), P(axis))
-    elif strategy == "alltoall":
-        if capacity <= 0:
-            raise ValueError("alltoall strategy requires capacity > 0")
-        body = partial(
-            alltoall_mp_local, phi=phi, axis_name=axis, capacity=capacity
-        )
-        in_specs = (P(axis, None), P(axis), P(axis), P(axis))
-    else:
-        raise ValueError(f"unknown strategy {strategy!r}")
-    return jax.shard_map(
-        body, mesh=mesh, in_specs=in_specs, out_specs=P(axis, None), check_vma=False
-    )
+warnings.warn(
+    "repro.core.distributed is deprecated; import from repro.runtime instead",
+    DeprecationWarning,
+    stacklevel=2,
+)

@@ -29,10 +29,11 @@ import jax.numpy as jnp
 
 from repro import params as P
 from repro import roofline as R
-from repro import sharding as SH
 from repro.configs import ARCHS, get_config
 from repro.launch import specs as SPECS
-from repro.launch.mesh import make_production_mesh
+from repro.runtime import compat as RTC
+from repro.runtime import partitioning as SH
+from repro.runtime.mesh import make_production_mesh
 from repro.models import lm
 from repro.models.config import SHAPES, ModelConfig, ShapeConfig
 from repro.optim import adamw
@@ -190,8 +191,8 @@ def run_cell(
     )
 
     t0 = time.time()
-    # set_mesh + active_rules make logical_constraint() live during tracing
-    with jax.set_mesh(mesh), SH.active_rules(rules):
+    # use_mesh + active_rules make logical_constraint() live during tracing
+    with RTC.use_mesh(mesh), SH.active_rules(rules):
         lowered = fn.lower(*args)
     rec["lower_s"] = round(time.time() - t0, 2)
     t0 = time.time()

@@ -20,8 +20,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import roofline as R
-from repro.core.distributed import make_sharded_mp
-from repro.launch.mesh import make_production_mesh
+from repro.runtime import make_sharded_mp
+from repro.runtime.mesh import flatten_mesh, make_production_mesh
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
 
@@ -31,11 +31,7 @@ def run(multi_pod: bool, log_nodes: int = 27, log_edges: int = 31, feat: int = 2
     n_chips = mesh.size
     n, e = 2**log_nodes, 2**log_edges
     # one flat "graph" axis over every chip (nodes and edges sharded)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    flat = jax.sharding.Mesh(
-        mesh.devices.reshape(-1), ("graph",),
-        axis_types=(jax.sharding.AxisType.Auto,),
-    )
+    flat = flatten_mesh(mesh, "graph")
 
     def phi(m):  # message transform: one dense layer's worth of work
         return jnp.maximum(m, 0.0)

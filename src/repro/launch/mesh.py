@@ -1,28 +1,17 @@
-"""Production mesh construction.
-
-A function, not a module-level constant, so importing this module never
-touches jax device state (device count locks on first jax init).
-
-Single pod: 16x16 = 256 chips (data x model) — TPU v5e pod slice.
-Multi-pod:  2x16x16 = 512 chips (pod x data x model); the ``pod`` axis
-carries cross-pod data parallelism over DCI.
-"""
+"""Deprecation shim — mesh construction moved to ``repro.runtime.mesh``."""
 from __future__ import annotations
 
-import jax
+import warnings
 
+from repro.runtime.mesh import (  # noqa: F401
+    flatten_mesh,
+    make_debug_mesh,
+    make_flat_mesh,
+    make_production_mesh,
+)
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
-
-
-def make_debug_mesh(data: int = 2, model: int = 2):
-    """Small mesh for the 8-device distributed tests."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+warnings.warn(
+    "repro.launch.mesh is deprecated; import from repro.runtime.mesh instead",
+    DeprecationWarning,
+    stacklevel=2,
+)

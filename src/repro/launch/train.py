@@ -10,13 +10,15 @@ Example (CPU):
       --reduced --steps 20 --batch 4 --seq 64
 """
 import argparse
+import contextlib
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro import params as P
-from repro import sharding as SH
+from repro import runtime as RT
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import ARCHS, get_config, get_reduced
 from repro.data.pipeline import SyntheticTokens, TokenPipelineConfig
@@ -46,13 +48,11 @@ def main():
     rules = None
     if args.debug_mesh:
         d, m = (int(x) for x in args.debug_mesh.split("x"))
-        mesh = jax.make_mesh(
-            (d, m), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-        )
+        mesh = RT.make_debug_mesh(d, m)
         rules = (
-            SH.fsdp_rules(mesh, args.batch)
+            RT.fsdp_rules(mesh, args.batch)
             if args.rules == "fsdp"
-            else SH.batch_rules(mesh, args.batch)
+            else RT.batch_rules(mesh, args.batch)
         )
 
     data = SyntheticTokens(
@@ -63,7 +63,7 @@ def main():
     ptree = lm.init_params(jax.random.PRNGKey(0), cfg)
     pvals, paxes = P.values(ptree), P.axes(ptree)
     if mesh is not None:
-        shardings = SH.tree_shardings(ptree, mesh, rules)
+        shardings = RT.tree_shardings(ptree, mesh, rules)
         pvals = jax.device_put(pvals, shardings)
     opt_state = adamw.init(pvals)
     ef = comp.init_error_buf(pvals) if args.grad_compression else None
@@ -73,8 +73,18 @@ def main():
 
     step_fn = jax.jit(make_train_step(cfg, opt_cfg, args.grad_compression),
                       donate_argnums=(0, 1, 2))
-    import jax.numpy as jnp
 
+    with contextlib.ExitStack() as mesh_ctx:
+        if mesh is not None:
+            # make logical_constraint() live during tracing/execution
+            mesh_ctx.enter_context(RT.use_mesh(mesh))
+            mesh_ctx.enter_context(RT.active_rules(rules))
+        _run_steps(args, data, step_fn, pvals, opt_state, ef, mgr, paxes)
+    mgr.wait()
+    print("done")
+
+
+def _run_steps(args, data, step_fn, pvals, opt_state, ef, mgr, paxes):
     it = iter(data)
     for step in range(args.steps):
         batch = {k: jnp.asarray(v) for k, v in next(it).items()}
@@ -87,8 +97,6 @@ def main():
         if (step + 1) % args.ckpt_every == 0 or step == args.steps - 1:
             mgr.save(step + 1, {"params": pvals, "opt": opt_state},
                      axes_tree={"params": paxes, "opt": None})
-    mgr.wait()
-    print("done")
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro import params as P
 from repro.core import scatter_gather as sg
 from repro.models.config import ModelConfig
-from repro.sharding import logical_constraint as _lc
+from repro.runtime import logical_constraint as _lc
 
 
 def moe_init(rng, cfg: ModelConfig) -> dict:

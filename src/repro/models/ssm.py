@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro import params as P
 from repro.models.config import ModelConfig
-from repro.sharding import logical_constraint as _lc
+from repro.runtime import logical_constraint as _lc
 
 # ---------------------------------------------------------------------------
 # Mamba

@@ -24,7 +24,7 @@ from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models import ssm as SSM
 from repro.models.config import ModelConfig
-from repro.sharding import logical_constraint as _lc
+from repro.runtime import logical_constraint as _lc
 
 Cache = Any  # list[pos] of dicts with (G, ...) stacked leaves
 

@@ -1,0 +1,71 @@
+"""repro.runtime — the version-portable execution substrate.
+
+One import surface for everything mesh/sharding related:
+
+  * ``compat``       — feature-detected JAX mesh API (make_mesh, shard_map,
+                       use_mesh, get_active_mesh)
+  * ``mesh``         — production / debug / flat mesh builders
+  * ``partitioning`` — logical-axis rules, PartitionSpec resolution,
+                       logical_constraint, sharded message passing
+
+The old ``repro.sharding``, ``repro.launch.mesh`` and the collective
+helpers of ``repro.core.distributed`` are deprecation shims over this
+package.
+"""
+from repro.runtime import compat, mesh, partitioning
+from repro.runtime.compat import (
+    get_active_mesh,
+    make_mesh,
+    shard_map,
+    use_mesh,
+)
+from repro.runtime.mesh import (
+    flatten_mesh,
+    make_debug_mesh,
+    make_flat_mesh,
+    make_production_mesh,
+)
+from repro.runtime.partitioning import (
+    DEFAULT_RULES,
+    active_rules,
+    allgather_mp_local,
+    alltoall_mp_local,
+    batch_rules,
+    fsdp_rules,
+    gnn_rules,
+    logical_constraint,
+    make_sharded_mp,
+    resolve_spec,
+    tree_shardings,
+    tree_specs,
+    zero1_rules,
+    zero1_spec,
+)
+
+__all__ = [
+    "compat",
+    "mesh",
+    "partitioning",
+    "get_active_mesh",
+    "make_mesh",
+    "shard_map",
+    "use_mesh",
+    "flatten_mesh",
+    "make_debug_mesh",
+    "make_flat_mesh",
+    "make_production_mesh",
+    "DEFAULT_RULES",
+    "active_rules",
+    "allgather_mp_local",
+    "alltoall_mp_local",
+    "batch_rules",
+    "fsdp_rules",
+    "gnn_rules",
+    "logical_constraint",
+    "make_sharded_mp",
+    "resolve_spec",
+    "tree_shardings",
+    "tree_specs",
+    "zero1_rules",
+    "zero1_spec",
+]

@@ -1,0 +1,136 @@
+"""Version-portable facade over JAX's moving mesh/sharding API surface.
+
+The mesh API has churned across JAX releases:
+
+  * ``jax.make_mesh`` grew an ``axis_types`` kwarg (with
+    ``jax.sharding.AxisType``) after 0.4.x,
+  * ``jax.shard_map`` moved out of ``jax.experimental.shard_map`` and
+    renamed ``check_rep`` to ``check_vma``,
+  * the "current mesh" moved from the thread-local ``with mesh:`` resource
+    env to ``jax.set_mesh`` / ``jax.sharding.get_abstract_mesh()``.
+
+Everything in ``repro`` that needs a mesh goes through this module, so the
+same code runs on JAX 0.4.x and newer.  Feature flags are module-level so
+tests can monkeypatch each detection path.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import inspect
+from typing import Callable, Optional
+
+import jax
+
+# --------------------------------------------------------------- detection
+
+HAS_GET_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+HAS_SET_MESH = hasattr(jax, "set_mesh")
+HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+HAS_JAX_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+# ------------------------------------------------------- mesh construction
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the concept exists."""
+    kw = {"devices": devices} if devices is not None else {}
+    if HAS_AXIS_TYPES:
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+def mesh_from_devices(devices, axis_names) -> jax.sharding.Mesh:
+    """Build a Mesh from an explicit device array (e.g. a flattened view of
+    another mesh's devices)."""
+    kw = {}
+    if HAS_AXIS_TYPES:
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.sharding.Mesh(devices, tuple(axis_names), **kw)
+
+
+# ------------------------------------------------------------- shard_map
+
+
+def shard_map(
+    f: Callable, mesh, in_specs, out_specs, check_replication: bool = False
+):
+    """Portable ``shard_map``: resolves the public-vs-experimental location
+    and the ``check_vma``/``check_rep`` kwarg rename."""
+    if HAS_JAX_SHARD_MAP:
+        sm = jax.shard_map
+        params = inspect.signature(sm).parameters
+        kw = "check_vma" if "check_vma" in params else "check_rep"
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  **{kw: check_replication})
+    from jax.experimental.shard_map import shard_map as sm
+
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=check_replication)
+
+
+# ------------------------------------------------------------ active mesh
+
+# Our own fallback context: always maintained by use_mesh() so that
+# get_active_mesh() works even where JAX has no queryable mesh state.
+_ACTIVE_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_runtime_mesh", default=None
+)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Install ``mesh`` as the active mesh for the dynamic extent.
+
+    On new JAX this is ``jax.set_mesh``; on 0.4.x it is the thread-local
+    ``with mesh:`` resource env.  Either way our contextvar mirrors it so
+    ``get_active_mesh()`` has a uniform answer.
+    """
+    token = _ACTIVE_MESH.set(mesh)
+    try:
+        if HAS_SET_MESH:
+            with jax.set_mesh(mesh):
+                yield mesh
+        else:
+            with mesh:
+                yield mesh
+    finally:
+        _ACTIVE_MESH.reset(token)
+
+
+def _native_abstract_mesh():
+    """The new-API answer, or None where absent/empty (split out so tests
+    can exercise both detection branches)."""
+    if not HAS_GET_ABSTRACT_MESH:
+        return None
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return None
+    return mesh
+
+
+def _thread_resources_mesh():
+    """The 0.4.x answer: the ``with mesh:`` thread-local physical mesh."""
+    try:
+        from jax.interpreters import pxla
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        return None if mesh.empty else mesh
+    except Exception:  # noqa: BLE001 — internal layout changed; fall through
+        return None
+
+
+def get_active_mesh() -> Optional[object]:
+    """Return the active (abstract or physical) mesh, or None.
+
+    Resolution order: native get_abstract_mesh -> our use_mesh contextvar
+    -> the 0.4.x thread-resources env.  Never raises on any JAX version.
+    """
+    mesh = _native_abstract_mesh()
+    if mesh is not None:
+        return mesh
+    mesh = _ACTIVE_MESH.get()
+    if mesh is not None:
+        return mesh
+    return _thread_resources_mesh()

@@ -1,0 +1,40 @@
+"""Mesh construction (subsumes the old ``repro.launch.mesh``).
+
+Functions, not module-level constants, so importing this module never
+touches jax device state (device count locks on first jax init).
+
+Single pod: 16x16 = 256 chips (data x model) — TPU v5e pod slice.
+Multi-pod:  2x16x16 = 512 chips (pod x data x model); the ``pod`` axis
+carries cross-pod data parallelism over DCI.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.runtime import compat
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return compat.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2) -> jax.sharding.Mesh:
+    """Small mesh for the 8-device distributed tests."""
+    return compat.make_mesh((data, model), ("data", "model"))
+
+
+def make_flat_mesh(n: int | None = None, axis: str = "data") -> jax.sharding.Mesh:
+    """One-axis mesh over ``n`` devices (default: all) — the shape used by
+    the sharded GNN serving/dry-run paths, where a single graph axis spans
+    every chip."""
+    devices = jax.devices()
+    n = len(devices) if n is None else n
+    return compat.make_mesh((n,), (axis,), devices=devices[:n])
+
+
+def flatten_mesh(mesh: jax.sharding.Mesh, axis: str = "graph") -> jax.sharding.Mesh:
+    """Collapse a multi-axis mesh into a single named axis over the same
+    devices (e.g. production (data, model) -> one 'graph' axis)."""
+    return compat.mesh_from_devices(mesh.devices.reshape(-1), (axis,))

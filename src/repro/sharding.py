@@ -1,208 +1,30 @@
-"""Logical-axis -> mesh-axis resolution with divisibility-aware fallback.
+"""Deprecation shim — this module moved to ``repro.runtime.partitioning``.
 
-Model code annotates every parameter/cache dimension with a *logical* axis
-name (params.Param).  This module turns those names into physical
-PartitionSpecs for a given mesh via a rules table, enforcing:
-
-  * a mesh axis is used at most once per tensor,
-  * a dim is only sharded if its size divides evenly,
-  * multi-axis rules (("pod","data") for batch) use the largest prefix
-    that divides.
-
-This is how e.g. Mixtral's 8 experts on a 16-way model axis fall back
-gracefully: "experts" fails the divisibility check, and the d_ff dim picks
-up the model axis instead (classic TP-within-expert) with no per-model
-special cases.
+External imports (``from repro import sharding``, ``from repro.sharding
+import logical_constraint``) keep working; new code should import from
+``repro.runtime`` instead.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import warnings
 
-import jax
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec
-
-from repro import params as P
-
-# Candidate mesh axes per logical axis, in priority order.  A tuple value
-# means "use jointly" (e.g. batch over pod x data); a list means
-# "try alternatives in order".
-DEFAULT_RULES: Dict[Optional[str], tuple] = {
-    "batch": ("pod", "data"),
-    "seq": (),
-    "kv_seq": (),  # overridden to ("data",) for seq-sharded long decode
-    "vocab": ("model",),
-    "embed": (),
-    "embed_out": (),
-    "heads": ("model",),
-    "heads_flat": ("model",),
-    "kv_heads": ("model",),
-    # head_dim stays unsharded: when kv_heads < TP width the KV projection
-    # is REPLICATED (Megatron convention).  Sharding head_dim instead
-    # measurably triggers involuntary GSPMD rematerialization at the
-    # repeat_kv boundary (full replication + 650 GB/dev temps).
-    "head_dim": (),
-    "mlp": ("model",),
-    "experts": ("model",),
-    # MoE slot tensors: batch-rows axis used by the expert-GEMM constraint;
-    # defaults to the batch mapping, overridden by hybrid FSDP+EP rules
-    "moe_batch": ("pod", "data"),
-    "inner": ("model",),  # mamba d_inner
-    "state": (),
-    "q_lora": (),
-    "kv_lora": (),
-    "layers": (),
-    None: (),
-}
-
-
-def resolve_spec(
-    axes: Tuple[Optional[str], ...],
-    shape: Tuple[int, ...],
-    mesh: Mesh,
-    rules: Dict[Optional[str], tuple] | None = None,
-) -> PartitionSpec:
-    """Map one tensor's logical axes to a PartitionSpec under ``mesh``."""
-    rules = rules or DEFAULT_RULES
-    used: set = set()
-    spec = []
-    for dim, name in zip(shape, axes):
-        cands = rules.get(name, ())
-        chosen: list = []
-        prod = 1
-        for ax in cands:
-            if ax not in mesh.shape or ax in used:
-                continue
-            nx = mesh.shape[ax]
-            if dim % (prod * nx) == 0:
-                chosen.append(ax)
-                prod *= nx
-        if chosen:
-            used.update(chosen)
-            spec.append(tuple(chosen) if len(chosen) > 1 else chosen[0])
-        else:
-            spec.append(None)
-    return PartitionSpec(*spec)
-
-
-def tree_shardings(param_tree, mesh: Mesh, rules=None):
-    """Param tree -> matching tree of NamedShardings."""
-
-    def f(p: P.Param):
-        shape = p.value.shape
-        return NamedSharding(mesh, resolve_spec(p.axes, shape, mesh, rules))
-
-    return jax.tree.map(f, param_tree, is_leaf=P.is_param)
-
-
-def tree_specs(param_tree, mesh: Mesh, rules=None):
-    def f(p: P.Param):
-        return resolve_spec(p.axes, p.value.shape, mesh, rules)
-
-    return jax.tree.map(f, param_tree, is_leaf=P.is_param)
-
-
-def batch_rules(mesh: Mesh, batch: int, seq_shard: bool = False) -> dict:
-    """Shape-aware rules for activations/caches.
-
-    When the global batch cannot cover the data axis (long-context decode,
-    batch=1), shard the KV-cache *sequence* dimension over data instead —
-    sequence parallelism for the cache (DESIGN.md §8).
-    """
-    rules = dict(DEFAULT_RULES)
-    dp = int(np.prod([mesh.shape.get(a, 1) for a in ("pod", "data")]))
-    if batch % dp != 0 or seq_shard:
-        rules["batch"] = ()
-        rules["kv_seq"] = ("data",)
-    return rules
-
-
-def fsdp_rules(mesh: Mesh, batch: int) -> dict:
-    """FSDP-style preset: data parallelism over BOTH mesh axes, parameters
-    sharded over the model axis (GSPMD all-gathers each layer's weights at
-    use — ZeRO-3 semantics).
-
-    Napkin math vs Megatron-TP at global batch 256 on 16x16 (per device):
-      TP:   ~6 activation all-reduces/layer x (B/dp x S x D) — O(10 s)
-      FSDP: param all-gather 3x params_bytes/model_axis + grad
-            reduce-scatter — O(1-4 s) for 4-30B dense models
-    and the replicated-attention memory problem (MLA, 40 heads) vanishes
-    because attention is sequence-local at batch-per-device <= 1.
-    """
-    rules = dict(DEFAULT_RULES)
-    rules["batch"] = ("pod", "data", "model")
-    rules["moe_batch"] = ("pod", "data", "model")  # pure FSDP: forcing EP
-    # inside this layout was measured at 469 s of resharding (H2, refuted)
-    rules["embed"] = ("model",)  # weight matrices: shard the embed dim
-    rules["kv_seq"] = ()
-    return rules
-
-
-def zero1_spec(spec: PartitionSpec, shape, mesh: Mesh, axis: str = "data") -> PartitionSpec:
-    """ZeRO-1: shard an optimizer-moment tensor over ``axis`` on its first
-    dim that is unsharded and divisible — on top of whatever sharding the
-    parameter already has.  Moments are only touched by the (local)
-    optimizer update, so this costs one reduce-scatter/all-gather pair of
-    the *gradients*, which GSPMD inserts at the update boundary."""
-    if axis not in mesh.shape:
-        return spec
-    used = set()
-    for s in spec:
-        if s is None:
-            continue
-        used.update(s if isinstance(s, tuple) else (s,))
-    if axis in used:
-        return spec
-    n = mesh.shape[axis]
-    out = list(spec)
-    for i, (dim, s) in enumerate(zip(shape, spec)):
-        if s is None and dim % n == 0:
-            out[i] = axis
-            return PartitionSpec(*out)
-    return spec
-
-
-def zero1_rules(base_rules: dict) -> dict:
-    """ZeRO-1-style optimizer-state sharding: moments additionally shard
-    their first unsharded dim over the data axis (applied to m/v only)."""
-    rules = dict(base_rules)
-    for name in ("embed", "layers"):
-        if not rules.get(name):
-            rules[name] = ("data",)
-    return rules
-
-
-import contextlib
-import contextvars
-
-_ACTIVE_RULES: contextvars.ContextVar = contextvars.ContextVar(
-    "repro_sharding_rules", default=None
+from repro.runtime.partitioning import (  # noqa: F401
+    DEFAULT_RULES,
+    active_rules,
+    batch_rules,
+    fsdp_rules,
+    gnn_rules,
+    logical_constraint,
+    resolve_spec,
+    tree_shardings,
+    tree_specs,
+    zero1_rules,
+    zero1_spec,
 )
+from repro.runtime.partitioning import _ACTIVE_RULES  # noqa: F401
 
-
-@contextlib.contextmanager
-def active_rules(rules: dict):
-    """Install shape-aware rules for logical_constraint (set by launchers
-    together with ``jax.set_mesh``)."""
-    token = _ACTIVE_RULES.set(rules)
-    try:
-        yield
-    finally:
-        _ACTIVE_RULES.reset(token)
-
-
-def logical_constraint(x, axes: Tuple[Optional[str], ...]):
-    """with_sharding_constraint via logical axes.
-
-    No-op unless a mesh is installed with ``jax.set_mesh`` (so CPU tests
-    and single-device runs are untouched).  Used at activation boundaries
-    where GSPMD's propagation otherwise *replicates compute* instead of
-    inserting a collective — measured 8-16x per-device FLOPs inflation on
-    the MoE expert GEMM (EXPERIMENTS.md §Perf).
-    """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty or mesh.size == 1:
-        return x
-    rules = _ACTIVE_RULES.get() or DEFAULT_RULES
-    spec = resolve_spec(axes, x.shape, mesh, rules)
-    return jax.lax.with_sharding_constraint(x, spec)
+warnings.warn(
+    "repro.sharding is deprecated; import from repro.runtime instead",
+    DeprecationWarning,
+    stacklevel=2,
+)

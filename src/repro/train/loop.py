@@ -13,6 +13,7 @@ flaky host, data corruption) and permanent node loss.  The loop provides:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable, Iterable, Optional
@@ -21,6 +22,7 @@ import jax
 import numpy as np
 
 from repro import params as P
+from repro import runtime as RT
 from repro.checkpoint.manager import CheckpointManager
 from repro.models import lm
 from repro.models.config import ModelConfig
@@ -65,15 +67,21 @@ def train(
     data: Iterable[dict],
     rng: Optional[jax.Array] = None,
     params: Any = None,
+    mesh: Any = None,
+    rules: Optional[dict] = None,
     inject_failure_at: Optional[int] = None,  # test hook
 ) -> dict:
     """Single-host reference driver (the multi-pod path goes through
-    launch/train.py which adds mesh + shardings around the same step fn).
+    launch/train.py which builds the mesh + shardings around the same step
+    fn).  With ``mesh`` the loop runs under ``runtime.use_mesh`` +
+    ``active_rules`` so logical_constraint() is live during tracing.
     Returns {"params", "opt_state", "history", "events"}."""
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     ptree = lm.init_params(rng, cfg) if params is None else params
     pvals = P.values(ptree)
     paxes = P.axes(ptree)
+    if mesh is not None:
+        pvals = jax.device_put(pvals, RT.tree_shardings(ptree, mesh, rules))
     opt_state = adamw.init(pvals)
     ef = comp.init_error_buf(pvals) if loop_cfg.grad_compression else None
     mgr = CheckpointManager(loop_cfg.ckpt_dir, keep=loop_cfg.keep)
@@ -87,10 +95,27 @@ def train(
         start, state = mgr.restore(template={"params": pvals, "opt": opt_state})
         pvals, opt_state = state["params"], state["opt"]
 
+    it = iter(data)
+    mesh_ctx = contextlib.ExitStack()
+    if mesh is not None:
+        mesh_ctx.enter_context(RT.use_mesh(mesh))
+        mesh_ctx.enter_context(
+            RT.active_rules(rules if rules is not None else RT.DEFAULT_RULES)
+        )
+    with mesh_ctx:
+        pvals, opt_state, ef, history, events = _run_loop(
+            loop_cfg, step_fn, mgr, it, pvals, opt_state, ef,
+            start, paxes, inject_failure_at,
+        )
+    mgr.wait()
+    return {"params": pvals, "opt_state": opt_state, "history": history,
+            "events": events, "axes": paxes}
+
+
+def _run_loop(loop_cfg, step_fn, mgr, it, pvals, opt_state, ef, step,
+              paxes, inject_failure_at):
     history, events = [], []
     durations: list = []
-    it = iter(data)
-    step = start
     retries = 0
     injected = False
     while step < loop_cfg.steps:
@@ -128,9 +153,7 @@ def train(
         if step % loop_cfg.ckpt_every == 0 or step == loop_cfg.steps:
             mgr.save(step, {"params": pvals, "opt": opt_state},
                      axes_tree={"params": paxes, "opt": None}, blocking=False)
-    mgr.wait()
-    return {"params": pvals, "opt_state": opt_state, "history": history,
-            "events": events, "axes": paxes}
+    return pvals, opt_state, ef, history, events
 
 
 def _device_batch(batch: dict) -> dict:

@@ -59,14 +59,13 @@ import sys
 import jax, jax.numpy as jnp, numpy as np
 sys.path.insert(0, "src")
 from repro.checkpoint.manager import CheckpointManager
-from repro import sharding as SH
+from repro.runtime import compat
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 d = sys.argv[1]
 mgr = CheckpointManager(d)
 
-mesh1 = jax.make_mesh((4, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh1 = compat.make_mesh((4, 2), ("data", "model"))
 w = jax.device_put(np.arange(64, dtype=np.float32).reshape(8, 8),
                    NamedSharding(mesh1, P("data", "model")))
 tree = {"w": w}
@@ -74,8 +73,7 @@ axes = {"w": ("batch", "mlp")}
 mgr.save(5, tree, axes_tree=axes, blocking=True)
 
 # 'node failure': restart on a SMALLER mesh (2x2) — elastic restore
-mesh2 = jax.make_mesh((2, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = compat.make_mesh((2, 2), ("data", "model"))
 step, got = mgr.restore(template={"w": np.zeros((8, 8), np.float32)},
                         mesh=mesh2)
 assert step == 5

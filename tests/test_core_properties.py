@@ -4,6 +4,11 @@ conversion consistency, dispatch/combine round-trips, and the O(N) memory
 claim of the merged scatter-gather."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import graph as G

@@ -1,0 +1,108 @@
+"""repro.runtime.compat must behave identically whether or not the host
+JAX exposes the new mesh APIs (``get_abstract_mesh`` / ``set_mesh`` /
+``AxisType`` / public ``jax.shard_map``).  Both detection branches are
+exercised by monkeypatching the module-level feature flags."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+from repro.runtime import compat
+from repro.runtime import partitioning as PT
+
+
+def test_make_mesh_with_and_without_axis_types(monkeypatch):
+    m = compat.make_mesh((1,), ("data",))
+    assert dict(m.shape) == {"data": 1}
+    monkeypatch.setattr(compat, "HAS_AXIS_TYPES", False)
+    m2 = compat.make_mesh((1,), ("data",))
+    assert dict(m2.shape) == {"data": 1}
+
+
+def test_get_active_mesh_absent_api_uses_use_mesh_context(monkeypatch):
+    monkeypatch.setattr(compat, "HAS_GET_ABSTRACT_MESH", False)
+    assert compat.get_active_mesh() is None
+    mesh = compat.make_mesh((1,), ("data",))
+    with compat.use_mesh(mesh):
+        got = compat.get_active_mesh()
+        assert got is not None and dict(got.shape) == {"data": 1}
+    assert compat.get_active_mesh() is None
+
+
+def test_get_active_mesh_present_api_wins(monkeypatch):
+    fake = types.SimpleNamespace(empty=False, size=4, shape={"data": 4})
+    monkeypatch.setattr(compat, "HAS_GET_ABSTRACT_MESH", True)
+    monkeypatch.setattr(
+        jax.sharding, "get_abstract_mesh", lambda: fake, raising=False
+    )
+    assert compat.get_active_mesh() is fake
+
+
+def test_get_active_mesh_present_but_empty_falls_through(monkeypatch):
+    empty = types.SimpleNamespace(empty=True, size=0, shape={})
+    monkeypatch.setattr(compat, "HAS_GET_ABSTRACT_MESH", True)
+    monkeypatch.setattr(
+        jax.sharding, "get_abstract_mesh", lambda: empty, raising=False
+    )
+    assert compat.get_active_mesh() is None
+    mesh = compat.make_mesh((1,), ("data",))
+    with compat.use_mesh(mesh):
+        got = compat.get_active_mesh()
+        assert got is not None and dict(got.shape) == {"data": 1}
+
+
+def test_shard_map_new_api_kwarg_rename(monkeypatch):
+    captured = {}
+
+    def fake_shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                       check_vma=True):
+        captured["check_vma"] = check_vma
+        return f
+
+    monkeypatch.setattr(jax, "shard_map", fake_shard_map, raising=False)
+    monkeypatch.setattr(compat, "HAS_JAX_SHARD_MAP", True)
+    fn = compat.shard_map(lambda x: x, mesh=None, in_specs=(), out_specs=())
+    assert callable(fn)
+    assert captured == {"check_vma": False}
+
+
+def test_shard_map_executes_without_new_api(monkeypatch):
+    monkeypatch.setattr(compat, "HAS_JAX_SHARD_MAP", False)
+    mesh = compat.make_mesh((1,), ("d",))
+    fn = compat.shard_map(
+        lambda x: x * 2.0, mesh=mesh,
+        in_specs=PartitionSpec("d"), out_specs=PartitionSpec("d"),
+    )
+    out = fn(jnp.arange(4.0))
+    np.testing.assert_allclose(np.asarray(out), np.arange(4.0) * 2)
+
+
+def test_logical_constraint_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert PT.logical_constraint(x, ("batch", None)) is x
+
+
+def test_logical_constraint_noop_on_single_device_mesh():
+    mesh = compat.make_mesh((1,), ("data",))
+    x = jnp.ones((4, 4))
+    with compat.use_mesh(mesh):
+        assert PT.logical_constraint(x, ("batch", None)) is x
+
+
+def test_deprecation_shims_reexport_runtime():
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro import sharding as old_sharding
+        from repro.core import distributed as old_distributed
+        from repro.launch import mesh as old_mesh
+
+    assert old_sharding.resolve_spec is PT.resolve_spec
+    assert old_sharding.logical_constraint is PT.logical_constraint
+    assert old_distributed.make_sharded_mp is PT.make_sharded_mp
+    from repro.runtime.mesh import make_production_mesh
+
+    assert old_mesh.make_production_mesh is make_production_mesh

@@ -1,0 +1,92 @@
+"""The Pallas ``segment_reduce_sorted`` kernel in interpret mode against
+the pure-jnp oracle (kernels/ref.py) for every op — including empty
+segments and edge counts that are not multiples of the block sizes.
+
+Two layers are covered on purpose:
+  * the raw kernel contract (sum-family exact; max/min leave ±FILL in
+    empty rows; "mean" returns the per-segment *sum*, finalized by ops),
+  * the public ``ops.segment_reduce(mode="kernel")`` semantics, which must
+    equal the oracle bit-for-contract for all five ops.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import segment_reduce
+from repro.kernels.segment_reduce import _FILL, segment_reduce_sorted
+
+RNG = np.random.default_rng(7)
+OPS = ["sum", "mean", "sqsum", "max", "min"]
+
+
+def _case(e, n, f, pad_tail=0, skip_even=False):
+    """Sorted ids in [0, n) with optional padding tail (ids == n) and,
+    with ``skip_even``, only odd segments populated (evens stay empty)."""
+    pool = np.arange(1, n, 2) if skip_even else np.arange(n)
+    ids = np.sort(RNG.choice(pool, size=e)).astype(np.int32)
+    if pad_tail:
+        ids[-pad_tail:] = n
+    vals = RNG.normal(size=(e, f)).astype(np.float32)
+    return jnp.asarray(vals), jnp.asarray(ids)
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize(
+    "e,n,f,be,bn",
+    [
+        (64, 16, 8, 32, 8),  # clean multiples of both blocks
+        (100, 24, 16, 32, 16),  # E not a multiple of block_e
+        (37, 19, 4, 16, 8),  # E and N both ragged
+        (260, 130, 8, 64, 64),  # N not a multiple of block_n
+    ],
+)
+def test_raw_kernel_matches_oracle(op, e, n, f, be, bn):
+    vals, ids = _case(e, n, f, pad_tail=max(e // 10, 1))
+    got = segment_reduce_sorted(
+        vals, ids, n, op, block_e=be, block_n=bn, interpret=True
+    )
+    if op == "mean":
+        # raw kernel contract: mean is finalized by ops; kernel returns sums
+        want = np.asarray(ref.segment_reduce_sorted_ref(vals, ids, n, "sum"))
+    else:
+        want = np.asarray(ref.segment_reduce_sorted_ref(vals, ids, n, op))
+        if op in ("max", "min"):
+            # raw kernel leaves ±FILL in empty rows (oracle writes 0)
+            count = np.bincount(
+                np.asarray(ids)[np.asarray(ids) < n], minlength=n
+            )[:, None]
+            want = np.where(count > 0, want, _FILL[op])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_public_op_matches_oracle_with_empty_segments(op):
+    # only odd segments populated; evens (incl. segment 0) must come out 0
+    vals, ids = _case(96, 20, 6, pad_tail=9, skip_even=True)
+    got = segment_reduce(vals, ids, 20, op, mode="kernel")
+    want = ref.segment_reduce_sorted_ref(vals, ids, 20, op)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+    assert float(np.abs(np.asarray(got)[::2]).max()) == 0.0
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_public_op_all_segments_empty(op):
+    # every edge is padding: output must be identically zero
+    vals = jnp.asarray(RNG.normal(size=(16, 3)), jnp.float32)
+    ids = jnp.full((16,), 8, jnp.int32)  # == num_segments -> padding
+    got = segment_reduce(vals, ids, 8, op, mode="kernel")
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((8, 3), np.float32))
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("e,n,f", [(100, 24, 16), (513, 129, 4)])
+def test_public_op_ragged_shapes(op, e, n, f):
+    vals, ids = _case(e, n, f, pad_tail=e // 7)
+    got = segment_reduce(vals, ids, n, op, mode="kernel")
+    want = ref.segment_reduce_sorted_ref(vals, ids, n, op)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
