@@ -2,6 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV lines.  Sections:
   fig7   per-model GNN inference latency (engine vs dense-SpMM, stream vs batch)
+  stream packed micro-batched streaming vs one-graph mode (QPS sweep)
   fig8   large-graph DGN (Cora/CiteSeer/PubMed sizes)
   fig9   NE/MP pipelining speed-ups (sweep + MolHIV + virtual node)
   table4 per-model resource footprint (params/FLOPs/bytes/VMEM tiles)
@@ -11,12 +12,13 @@ import sys
 
 
 def main() -> None:
-    sections = sys.argv[1:] or ["fig9", "table4", "fig8", "fig7", "roofline"]
+    sections = sys.argv[1:] or ["fig9", "table4", "fig8", "fig7", "stream", "roofline"]
     from benchmarks import (
         bench_fig7_latency,
         bench_fig8_large_graph,
         bench_fig9_pipeline,
         bench_roofline,
+        bench_stream_throughput,
         bench_table4_resources,
     )
 
@@ -25,6 +27,7 @@ def main() -> None:
         "fig8": bench_fig8_large_graph,
         "fig9": bench_fig9_pipeline,
         "table4": bench_table4_resources,
+        "stream": bench_stream_throughput,
         "roofline": bench_roofline,
     }
     for s in sections:

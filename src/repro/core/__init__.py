@@ -19,6 +19,13 @@ from repro.core.message_passing import (
     pna_scalers,
     AGGREGATORS,
 )
+from repro.core.batching import (
+    BucketBudget,
+    PackMeta,
+    pack_graphs,
+    pack_eigvecs,
+    unpack_outputs,
+)
 from repro.core.scatter_gather import (
     segment_reduce,
     sorted_segment_reduce,
@@ -36,6 +43,11 @@ __all__ = [
     "batch_graphs",
     "in_degree",
     "out_degree",
+    "BucketBudget",
+    "PackMeta",
+    "pack_graphs",
+    "pack_eigvecs",
+    "unpack_outputs",
     "mp_layer",
     "gather_scatter",
     "global_pool",

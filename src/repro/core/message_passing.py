@@ -110,12 +110,22 @@ def pna_aggregate(graph: Graph, messages: jax.Array, avg_degree: float) -> jax.A
 # ---------------------------------------------------------------------------
 
 
-def global_pool(graph: Graph, x: jax.Array, op: str = "mean") -> jax.Array:
-    """Pool node embeddings per graph id -> (n_graph_pad, F).
+def global_pool(
+    graph: Graph,
+    x: jax.Array,
+    op: str = "mean",
+    num_graphs: int | None = None,
+) -> jax.Array:
+    """Pool node embeddings per graph id -> (num_graphs, F).
 
     Uses the same segment machinery; graphs in a padded batch are segments.
+    ``num_graphs`` is the static graph-slot count of the batch (the packed
+    bucket's G_pad).  When omitted it falls back to the conservative
+    ``num_nodes`` upper bound — every graph has at least one node — which
+    keeps single-graph call sites working but makes the pooled buffer
+    mostly padding; batch/packed callers should always pass the real count.
     """
-    max_graphs = graph.num_nodes  # safe upper bound; callers slice
-    gid = jnp.where(graph.node_mask, graph.graph_id, max_graphs)
+    m = graph.num_nodes if num_graphs is None else num_graphs
+    gid = jnp.where(graph.node_mask, graph.graph_id, m)
     xm = jnp.where(graph.node_mask[:, None], x, 0.0)
-    return sg.segment_reduce(xm, gid, max_graphs, op)
+    return sg.segment_reduce(xm, gid, m, op)

@@ -207,32 +207,40 @@ def apply(
     g: G.Graph,
     cfg: GNNConfig,
     eigvec: Optional[jax.Array] = None,
+    num_graphs: Optional[int] = None,
 ) -> jax.Array:
-    """Forward pass.  Returns (n_graph_pad, out_dim) for graph tasks or
+    """Forward pass.  Returns (num_graphs, out_dim) for graph tasks or
     (N_pad, out_dim) for node tasks.  ``eigvec`` is DGN's precomputed
-    Laplacian eigenvector *input* (a model input, like the paper's)."""
+    Laplacian eigenvector *input* (a model input, like the paper's).
+
+    ``num_graphs`` is the static graph-slot count (a packed bucket's G_pad
+    or the serving batch size); it sizes the pooled / virtual-node buffers.
+    When omitted it falls back to the ``num_nodes`` upper bound, which is
+    correct but allocates one pooled row per padded node.
+    """
+    m = g.num_nodes if num_graphs is None else num_graphs
     layer_fn = _LAYERS[cfg.model]
     extras = {"eigvec": eigvec}
     x = L.linear_apply(params["encoder"], g.node_feat, mode=cfg.kernel_mode)
     x = jnp.where(g.node_mask[:, None], x, 0.0)
-    vn = None  # (max_graphs, w) per-graph virtual-node state
+    vn = None  # (m, w) per-graph virtual-node state
     if cfg.virtual_node:
-        vn = jnp.broadcast_to(params["vn_embed"], (g.num_nodes, x.shape[-1]))
+        vn = jnp.broadcast_to(params["vn_embed"], (m, x.shape[-1]))
 
     for li in range(cfg.num_layers):
         if cfg.virtual_node:
             # virtual node broadcasts its state to every node of its graph
-            gid = jnp.clip(g.graph_id, 0, g.num_nodes - 1)
+            gid = jnp.clip(g.graph_id, 0, m - 1)
             x = x + jnp.take(vn, gid, axis=0) * g.node_mask[:, None]
         x = layer_fn(g, x, params["layers"][li], cfg, extras)
         if cfg.virtual_node and li < cfg.num_layers - 1:
             # vn_{l+1} = MLP(vn_l + sum-pool of that graph's nodes)
-            pooled = mp.global_pool(g, x, op="sum")  # (max_graphs, w)
+            pooled = mp.global_pool(g, x, op="sum", num_graphs=m)
             vn = L.mlp_apply(
                 params["vn_mlp"][li], pooled + vn, mode=cfg.kernel_mode
             )
 
     if cfg.task == "graph":
-        pooled = mp.global_pool(g, x, op="mean")
+        pooled = mp.global_pool(g, x, op="mean", num_graphs=m)
         return L.mlp_apply(params["head"], pooled, mode=cfg.kernel_mode)
     return L.mlp_apply(params["head"], x, mode=cfg.kernel_mode)

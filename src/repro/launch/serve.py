@@ -4,6 +4,8 @@ GNN engine for the paper's models.
 Examples (CPU, reduced configs):
   PYTHONPATH=src python -m repro.launch.serve --arch chatglm3-6b --reduced
   PYTHONPATH=src python -m repro.launch.serve --gnn gin --n-graphs 32
+  PYTHONPATH=src python -m repro.launch.serve --gnn gin --stream \
+      --n-graphs 64 --qps 2000 --max-wait-ms 2
 """
 import argparse
 
@@ -52,6 +54,29 @@ def serve_gnn(args):
         mesh = RT.make_flat_mesh(args.gnn_mesh, axis="data")
     eng = GNNEngine(cfg, params, mesh=mesh)
     graphs = MoleculeStream(MOLHIV, seed=0).take(args.n_graphs)
+    if args.stream:
+        from repro.serve.scheduler import StreamScheduler
+
+        sched = StreamScheduler(
+            eng, capacity=args.pack, max_wait_s=args.max_wait_ms * 1e-3,
+            with_eigvec=(args.gnn == "dgn"),
+        )
+        rep = sched.run(graphs, qps=args.qps)
+        if rep.num_requests == 0:
+            print(f"{args.gnn} stream: no graphs (--n-graphs {args.n_graphs})")
+            return
+        sizes = np.asarray(rep.batch_sizes)
+        print(f"{args.gnn} stream(qps={args.qps:g}, max-wait {args.max_wait_ms}ms, "
+              f"pack x{args.pack}"
+              f"{', mesh=' + str(args.gnn_mesh) if mesh is not None else ''}): "
+              f"{rep.num_requests} graphs in {rep.makespan_s*1e3:.1f} ms virtual "
+              f"({rep.graphs_per_s:.0f} graphs/s)")
+        print(f"  latency ms: p50 {rep.percentile_ms(50):.2f}  "
+              f"p95 {rep.percentile_ms(95):.2f}  p99 {rep.percentile_ms(99):.2f}")
+        print(f"  {len(sizes)} flushes (mean batch {sizes.mean():.1f}, "
+              f"reasons {dict(rep.flush_reasons)}); "
+              f"compile {rep.compile_s:.1f}s excluded")
+        return
     if args.batched:
         outs, per_graph_s = eng.infer_batched(
             graphs, batch_size=args.batch, n_pad=args.batch * 32,
@@ -82,6 +107,14 @@ def main():
     ap.add_argument("--n-graphs", type=int, default=16)
     ap.add_argument("--batched", action="store_true",
                     help="GNN: padded-batch mode instead of streaming")
+    ap.add_argument("--stream", action="store_true",
+                    help="GNN: micro-batched streaming via serve.scheduler")
+    ap.add_argument("--qps", type=float, default=1000.0,
+                    help="stream: offered load; <=0 means all queued at t=0")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="stream: flush a bucket at latest this long after it opens")
+    ap.add_argument("--pack", type=int, default=4,
+                    help="stream: packed budget = this many base buckets")
     ap.add_argument("--gnn-mesh", type=int, default=1,
                     help="GNN: shard node/edge rows over this many devices")
     args = ap.parse_args()

@@ -1,3 +1,6 @@
-"""Serving engines: streaming GNN inference + batched LM prefill/decode."""
+"""Serving engines: streaming GNN inference (single-graph, batched, and
+packed multi-graph via the micro-batching scheduler) + batched LM
+prefill/decode."""
 from repro.serve.gnn_engine import GNNEngine
 from repro.serve.engine import LMServer, ServeConfig
+from repro.serve.scheduler import Request, StreamReport, StreamScheduler

@@ -7,9 +7,13 @@ size), converts COO->CSC *on device inside the compiled step* (the
 paper's on-chip converter), and runs any registered model through the one
 generic message-passing program.
 
-Two modes, both measured by benchmarks/bench_fig7_latency.py:
+Three modes, measured by benchmarks/bench_fig7_latency.py and
+benchmarks/bench_stream_throughput.py:
   * ``infer_stream``  — batch-size-1, per-graph latency (paper Fig. 7)
-  * ``infer_batched`` — padded batching (the TPU-efficient mode)
+  * ``infer_batched`` — fixed-size padded batching (the TPU-efficient mode)
+  * ``infer_packed``  — one already-packed multi-graph batch (built by
+    ``core.batching.pack_graphs``; fed by ``serve.scheduler``'s
+    micro-batcher), the streaming-throughput mode
 
 Both run through ``repro.runtime``: pass a ``mesh`` and the engine shards
 the padded node/edge axes over it via ``logical_constraint`` (logical axes
@@ -104,7 +108,7 @@ class GNNEngine:
                 return nb, eb
         raise ValueError(f"graph ({n},{e}) exceeds largest bucket {self.buckets[-1]}")
 
-    def _bucket(self, key: tuple) -> _CompiledBucket:
+    def _bucket(self, key: tuple, num_graphs: Optional[int] = None) -> _CompiledBucket:
         cb = self._compiled.get(key)
         if cb is None:
 
@@ -113,7 +117,8 @@ class GNNEngine:
                 g = self._constrain_graph(g)
                 if eigvec is not None:
                     eigvec = RT.logical_constraint(eigvec, ("nodes",))
-                return M.apply(params, g, self.cfg, eigvec=eigvec)
+                return M.apply(params, g, self.cfg, eigvec=eigvec,
+                               num_graphs=num_graphs)
 
             cb = _CompiledBucket(fn=run)
             self._compiled[key] = cb
@@ -148,7 +153,7 @@ class GNNEngine:
                 nb, eb = self._bucket_for(nf.shape[0], len(s))
                 g = G.from_numpy(s, r, nf, ef, n_pad=nb, e_pad=eb)
                 eig = self._eigvec(s, r, nf.shape[0], nb) if with_eigvec else None
-                cb = self._bucket(("stream", nb, eb))
+                cb = self._bucket(("stream", nb, eb), num_graphs=1)
                 compile_time += self._warm(cb, ("eig", with_eigvec), g, eig)
                 t0 = time.perf_counter()
                 out = jax.block_until_ready(cb.fn(self.params, g, eig))
@@ -159,7 +164,8 @@ class GNNEngine:
     def infer_batched(self, graphs: Sequence[tuple], batch_size: int,
                       n_pad: int, e_pad: int, with_eigvec: bool = False):
         """Padded-batch mode.  Returns (outputs (n_graphs, out), seconds/graph)."""
-        cb = self._bucket(("batched", n_pad, e_pad, batch_size))
+        cb = self._bucket(("batched", n_pad, e_pad, batch_size),
+                          num_graphs=batch_size)
         outs = []
         total = 0.0
         with self._mesh_scope():
@@ -169,7 +175,17 @@ class GNNEngine:
                 g = G.batch_graphs(gs, n_pad=n_pad, e_pad=e_pad)
                 eig = None
                 if with_eigvec:
-                    eig = jnp.zeros((n_pad,), jnp.float32)
+                    # per-graph eigenvectors at the packed node offsets
+                    # (host-side, built before the timed region)
+                    vec = np.zeros((n_pad,), np.float32)
+                    off = 0
+                    for s, r, nf, _ in gs:
+                        n = nf.shape[0]
+                        vec[off : off + n] = np.asarray(
+                            self._eigvec(s, r, n, n)
+                        )
+                        off += n
+                    eig = jnp.asarray(vec)
                 # warm this chunk's exact trace signature untimed: a new
                 # signature can show up mid-stream (first chunk, eigvec
                 # toggling, a dtype change), not only at i == 0.
@@ -182,6 +198,38 @@ class GNNEngine:
                 total += time.perf_counter() - t0
                 outs.append(np.asarray(out[: len(chunk)]))
         return np.concatenate(outs), total / len(graphs)
+
+    def infer_packed(self, packed: G.Graph, budget, eigvec=None,
+                     warm_only: bool = False):
+        """Run one already-packed multi-graph batch (``core.batching``).
+
+        ``budget`` is the ``BucketBudget`` the batch was packed against —
+        it is the compile-cache key, so every batch packed to the same
+        budget reuses one compiled program regardless of how many real
+        graphs it carries.  Works identically with and without an engine
+        mesh (the packed node/edge rows shard exactly like a single
+        graph's).  Returns (outputs (G_pad, out), compute seconds) with
+        warm/compile time excluded and tracked in ``compile_seconds``.
+
+        ``warm_only`` compiles/warms this batch's signature and returns
+        (None, 0.0) without a second timed execution — the scheduler uses
+        it to pre-warm budget-ladder rungs.
+        """
+        key = ("packed", budget.n_pad, budget.e_pad, budget.g_pad)
+        cb = self._bucket(key, num_graphs=budget.g_pad)
+        if eigvec is not None:
+            eigvec = jnp.asarray(eigvec, jnp.float32)
+        with self._mesh_scope():
+            sig = ("eig", eigvec is not None) + tuple(
+                (tuple(v.shape), str(v.dtype)) for v in jax.tree.leaves(packed)
+            )
+            self._warm(cb, sig, packed, eigvec)
+            if warm_only:
+                return None, 0.0
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(cb.fn(self.params, packed, eigvec))
+            dt = time.perf_counter() - t0
+        return np.asarray(out), dt
 
     def _eigvec(self, s, r, n, n_pad):
         """First non-trivial Laplacian eigenvector — DGN's *input* (the

@@ -1,0 +1,36 @@
+"""Docs hygiene: the link checker passes on the real tree and actually
+catches breakage (so the CI step can't silently no-op)."""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_docs_links as cdl  # noqa: E402
+
+
+def test_repo_docs_have_no_dangling_references():
+    assert cdl.main() == 0
+
+
+def test_checker_flags_broken_link_and_dangling_path(tmp_path):
+    md = tmp_path / "doc.md"
+    md.write_text(
+        "see [other](missing.md) and `src/repro/no_such_module.py`\n"
+        "but `src/repro/core/batching.py` and [real](REAL.md) are fine\n"
+    )
+    (tmp_path / "REAL.md").write_text("x")
+    errors = cdl.check_file(md, cdl.repo_files())
+    assert any("missing.md" in e for e in errors)
+    assert any("no_such_module.py" in e for e in errors)
+    assert len(errors) == 2
+
+
+def test_checker_runs_as_script():
+    r = subprocess.run(
+        [sys.executable, "tools/check_docs_links.py"],
+        capture_output=True, text=True, cwd=ROOT,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout

@@ -65,6 +65,24 @@ def test_infer_stream_bucket_records(engine):
     assert compile_s > 0  # first visit to each bucket compiled untimed
 
 
+def test_dgn_batched_matches_stream_eigvec(rng):
+    """Batched mode must feed DGN the same per-graph Laplacian
+    eigenvectors the stream mode computes (it used to pass zeros)."""
+    from repro.data.pipeline import MOLHIV, MoleculeStream
+    from repro.gnn import init
+    from repro.gnn.models import paper_config
+    from repro.serve.gnn_engine import GNNEngine
+
+    cfg = paper_config("dgn")
+    eng = GNNEngine(cfg, init(jax.random.PRNGKey(0), cfg))
+    graphs = [g[:4] for g in MoleculeStream(MOLHIV, seed=2).take(4)]
+    outs, _, _ = eng.infer_stream(graphs, with_eigvec=True)
+    outs_b, _ = eng.infer_batched(graphs, batch_size=4, n_pad=256, e_pad=768,
+                                  with_eigvec=True)
+    for i in range(4):
+        np.testing.assert_allclose(outs_b[i], outs[i][0], rtol=1e-4, atol=1e-5)
+
+
 def test_engine_has_no_dead_eigvec_dim_param(engine):
     import inspect
 

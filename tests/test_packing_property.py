@@ -1,0 +1,194 @@
+"""Packing round-trip properties: a packed multi-graph batch must be
+indistinguishable from per-graph serving.
+
+Three layers of guarantee, for every model in gnn/models.py:
+  * round-trip — packed-batch forward slot i == graph i served alone,
+    across two different bucket budgets (padding-amount independence);
+  * mask-exact — at fixed shapes, garbage written into every padding
+    region (node/edge features, padded edge endpoints, graph ids, eigvec
+    tail) leaves outputs BITWISE identical;
+  * aggregators — gather_scatter over a packed batch equals per-graph
+    gather_scatter for all ops in AGGREGATORS.
+
+The deterministic seeded cases below always run; when ``hypothesis`` is
+installed (requirements-dev.txt) the same properties are additionally
+fuzzed over randomly drawn graph sets.
+"""
+import dataclasses
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import message_passing as mp
+from repro.core.batching import BucketBudget, pack_eigvecs, pack_graphs, unpack_outputs
+from repro.core.graph import batch_graphs
+from repro.gnn import init
+from repro.gnn.models import apply, paper_config
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade to the seeded cases only
+    HAVE_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(0)
+MODELS = [("gcn", False), ("gin", False), ("gin", True), ("gat", False),
+          ("pna", False), ("dgn", False)]
+# singles always fit (16, 40); budgets hold any generated set
+SINGLE_N, SINGLE_E = 16, 40
+BUDGETS = (BucketBudget(80, 200, 6), BucketBudget(96, 240, 8))
+# deterministic graph-set shapes: 1..5 graphs, n<=12 nodes, e<=30 edges
+SEED_CASES = [
+    ([(8, 20), (11, 26), (4, 7)], 0),
+    ([(12, 30)], 1),
+    ([(3, 2), (3, 2), (3, 2), (3, 2), (3, 2)], 2),
+    ([(12, 30), (12, 30), (12, 30), (12, 30), (12, 30)], 3),
+    ([(5, 9), (12, 24)], 4),
+]
+
+
+def _materialize(sizes, seed):
+    rng = np.random.default_rng(seed)
+    graphs, eigs = [], []
+    for n, e in sizes:
+        graphs.append((
+            rng.integers(0, n, e).astype(np.int32),
+            rng.integers(0, n, e).astype(np.int32),
+            rng.normal(size=(n, 9)).astype(np.float32),
+            rng.normal(size=(e, 3)).astype(np.float32),
+        ))
+        eigs.append(rng.normal(size=(n,)).astype(np.float32))
+    return graphs, eigs
+
+
+@lru_cache(maxsize=None)
+def _model(model, vn):
+    """(cfg, params, jitted packed fns per budget, jitted single fn)."""
+    cfg = paper_config(model, virtual_node=vn)
+    params = init(KEY, cfg)
+    packed_fns = {
+        b: jax.jit(lambda p, g, eig, b=b: apply(p, g, cfg, eigvec=eig,
+                                                num_graphs=b.g_pad))
+        for b in BUDGETS
+    }
+    single_fn = jax.jit(lambda p, g, eig: apply(p, g, cfg, eigvec=eig, num_graphs=1))
+    return cfg, params, packed_fns, single_fn
+
+
+def _single_outputs(graphs, eigs, params, single_fn):
+    outs = []
+    for g, eig in zip(graphs, eigs):
+        single = batch_graphs([g], n_pad=SINGLE_N, e_pad=SINGLE_E)
+        ev = np.zeros((SINGLE_N,), np.float32)
+        ev[: len(eig)] = eig
+        outs.append(np.asarray(single_fn(params, single, jnp.asarray(ev))[0]))
+    return outs
+
+
+def _check_roundtrip(model, vn, sizes, seed):
+    graphs, eigs = _materialize(sizes, seed)
+    cfg, params, packed_fns, single_fn = _model(model, vn)
+    want = _single_outputs(graphs, eigs, params, single_fn)
+    for budget in BUDGETS:
+        packed, meta = pack_graphs(graphs, budget)
+        eig = jnp.asarray(pack_eigvecs(eigs, meta))
+        out = np.asarray(packed_fns[budget](params, packed, eig))
+        got = unpack_outputs(out, meta, level="graph")
+        for i in range(len(graphs)):
+            np.testing.assert_allclose(
+                got[i][0], want[i], rtol=1e-4, atol=1e-6,
+                err_msg=f"{model} vn={vn} budget={budget} graph={i}",
+            )
+
+
+def _check_gather_scatter(sizes, seed, op):
+    graphs, _ = _materialize(sizes, seed)
+    budget = BUDGETS[0]
+    packed, meta = pack_graphs(graphs, budget)
+    msgs = jnp.take(packed.node_feat, packed.src, axis=0)
+    agg_packed = np.asarray(mp.gather_scatter(packed, msgs, ops=(op,)))
+    per_node = unpack_outputs(agg_packed, meta, level="node")
+    for i, g in enumerate(graphs):
+        single = batch_graphs([g], n_pad=SINGLE_N, e_pad=SINGLE_E)
+        m = jnp.take(single.node_feat, single.src, axis=0)
+        want = np.asarray(mp.gather_scatter(single, m, ops=(op,)))
+        n = meta.node_counts[i]
+        np.testing.assert_allclose(
+            per_node[i], want[:n], rtol=1e-5, atol=1e-6,
+            err_msg=f"op={op} graph={i}",
+        )
+
+
+# ---------------------------------------------------------- deterministic
+
+
+@pytest.mark.parametrize("model,vn", MODELS)
+@pytest.mark.parametrize("sizes,seed", SEED_CASES[:3])
+def test_packed_forward_matches_per_graph(model, vn, sizes, seed):
+    _check_roundtrip(model, vn, sizes, seed)
+
+
+@pytest.mark.parametrize("op", mp.AGGREGATORS)
+@pytest.mark.parametrize("sizes,seed", SEED_CASES)
+def test_packed_gather_scatter_matches_per_graph(op, sizes, seed):
+    _check_gather_scatter(sizes, seed, op)
+
+
+@pytest.mark.parametrize("model,vn", MODELS)
+def test_packed_forward_is_mask_exact(model, vn, rng):
+    """Garbage in every padding region must not move a single bit."""
+    budget = BUDGETS[0]
+    graphs, eigs = _materialize([(8, 20), (11, 26), (4, 7)], seed=3)
+    cfg, params, packed_fns, _ = _model(model, vn)
+    packed, meta = pack_graphs(graphs, budget)
+    eig = pack_eigvecs(eigs, meta)
+    baseline = np.asarray(packed_fns[budget](params, packed, jnp.asarray(eig)))
+
+    n_real = sum(meta.node_counts)
+    e_real = sum(meta.edge_counts)
+    nf = np.asarray(packed.node_feat).copy()
+    nf[n_real:] = rng.normal(size=nf[n_real:].shape)
+    ef = np.asarray(packed.edge_feat).copy()
+    ef[e_real:] = rng.normal(size=ef[e_real:].shape)
+    ei = np.asarray(packed.edge_index).copy()
+    ei[:, e_real:] = rng.integers(0, budget.n_pad, size=ei[:, e_real:].shape)
+    gid = np.asarray(packed.graph_id).copy()
+    gid[n_real:] = rng.integers(0, budget.g_pad + 1, size=budget.n_pad - n_real)
+    eig_fuzz = eig.copy()
+    eig_fuzz[n_real:] = rng.normal(size=budget.n_pad - n_real)
+    fuzzed = dataclasses.replace(
+        packed,
+        node_feat=jnp.asarray(nf.astype(np.float32)),
+        edge_feat=jnp.asarray(ef.astype(np.float32)),
+        edge_index=jnp.asarray(ei.astype(np.int32)),
+        graph_id=jnp.asarray(gid.astype(np.int32)),
+    )
+    out = np.asarray(packed_fns[budget](params, fuzzed, jnp.asarray(eig_fuzz)))
+    np.testing.assert_array_equal(
+        out[: meta.num_graphs], baseline[: meta.num_graphs],
+        err_msg=f"{model} vn={vn}: padding content leaked into outputs",
+    )
+
+
+# -------------------------------------------------------------- hypothesis
+
+if HAVE_HYPOTHESIS:
+    graph_set_strategy = st.lists(
+        st.tuples(st.integers(3, 12), st.integers(2, 30)), min_size=1, max_size=5
+    )
+
+    @pytest.mark.parametrize("model,vn", MODELS)
+    @settings(max_examples=5, deadline=None)
+    @given(sizes=graph_set_strategy, seed=st.integers(0, 2**16))
+    def test_packed_forward_matches_per_graph_fuzzed(model, vn, sizes, seed):
+        _check_roundtrip(model, vn, sizes, seed)
+
+    @settings(max_examples=15, deadline=None)
+    @given(sizes=graph_set_strategy, seed=st.integers(0, 2**16),
+           op=st.sampled_from(mp.AGGREGATORS))
+    def test_packed_gather_scatter_matches_per_graph_fuzzed(sizes, seed, op):
+        _check_gather_scatter(sizes, seed, op)

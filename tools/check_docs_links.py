@@ -1,0 +1,106 @@
+"""Docs link checker: keep docs/*.md cross-references and the README
+module map from rotting.
+
+Two classes of reference are validated across README.md and docs/*.md:
+
+  1. relative markdown links ``[text](path)`` — the target file must
+     exist (resolved against the containing file's directory, anchors
+     stripped; http(s)/mailto links are skipped);
+  2. path-like tokens naming .py/.md files — backticked inline code and
+     fenced code blocks (the README module map) are scanned for tokens
+     such as ``src/repro/core/batching.py`` or ``compat.py``, and each
+     must resolve to a real file: exactly from the repo root, or by
+     unique-suffix match against the repo tree (so short forms like
+     ``runtime/mesh.py`` stay valid until the file actually moves).
+
+Exit code 1 with a per-reference report when anything dangles.
+
+  python tools/check_docs_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", ".hypothesis"}
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+INLINE_CODE = re.compile(r"`([^`]+)`")
+PATH_TOKEN = re.compile(r"^[A-Za-z0-9_./-]+\.(?:py|md)$")
+
+
+def repo_files() -> list[Path]:
+    out = []
+    for p in ROOT.rglob("*"):
+        if p.is_file() and not (set(p.relative_to(ROOT).parts) & SKIP_DIRS):
+            out.append(p.relative_to(ROOT))
+    return out
+
+
+def doc_files() -> list[Path]:
+    docs = sorted((ROOT / "docs").glob("*.md")) if (ROOT / "docs").is_dir() else []
+    return [ROOT / "README.md"] + docs
+
+
+def iter_path_tokens(text: str):
+    """Path-like tokens from inline code spans and fenced code blocks."""
+    for m in INLINE_CODE.finditer(text):
+        yield m.group(1).strip()
+    in_fence = False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            for tok in re.split(r"[\s(),:]+", line):
+                yield tok
+
+
+def check_file(md: Path, files: list[Path]) -> list[str]:
+    text = md.read_text()
+    try:
+        rel = md.relative_to(ROOT)
+    except ValueError:  # e.g. a tmp file under test
+        rel = md
+    errors = []
+
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if path and not (md.parent / path).exists():
+            errors.append(f"{rel}: broken link -> {target}")
+
+    suffixes = {str(f): f for f in files}
+    seen = set()
+    for tok in iter_path_tokens(text):
+        tok = tok.strip().rstrip(".,;:")
+        if not PATH_TOKEN.match(tok) or tok in seen:
+            continue
+        seen.add(tok)
+        if tok in suffixes or (ROOT / tok).exists():
+            continue
+        # suffix match: `runtime/mesh.py` / `compat.py` must name a real file
+        hits = [f for f in files if str(f).endswith("/" + tok)]
+        if not hits:
+            errors.append(f"{rel}: dangling path reference `{tok}`")
+    return errors
+
+
+def main() -> int:
+    files = repo_files()
+    errors = []
+    for md in doc_files():
+        errors.extend(check_file(md, files))
+    for e in errors:
+        print(f"ERROR: {e}")
+    if not errors:
+        print(f"docs link check OK ({len(doc_files())} files)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
