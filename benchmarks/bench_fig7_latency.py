@@ -76,8 +76,10 @@ def run(dataset=MOLHIV, n_graphs=N_GRAPHS):
 
 
 def main():
-    for row in run(MOLHIV) + run(MOLPCBA, n_graphs=12):
+    rows = run(MOLHIV) + run(MOLPCBA, n_graphs=12)
+    for row in rows:
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    return rows
 
 
 if __name__ == "__main__":

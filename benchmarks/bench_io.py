@@ -1,0 +1,33 @@
+"""Machine-readable benchmark output: one ``BENCH_<name>.json`` per run.
+
+Schema (consumed by perf-trajectory tooling; keep stable):
+
+    {"name": str, "config": dict, "metrics": list-of-rows, "timestamp": iso8601}
+
+``metrics`` is whatever row list the benchmark's ``run()`` produced (the
+same dicts its CSV lines print).  Output directory defaults to the current
+working directory; override with ``REPRO_BENCH_DIR``.
+"""
+from __future__ import annotations
+
+import json
+import os
+from datetime import datetime, timezone
+
+
+def write_bench_json(name: str, metrics, config: dict | None = None,
+                     out_dir: str | None = None) -> str:
+    out_dir = out_dir or os.environ.get("REPRO_BENCH_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    payload = {
+        "name": name,
+        "config": config or {},
+        "metrics": metrics,
+        "timestamp": datetime.now(timezone.utc).isoformat(timespec="seconds"),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+        f.write("\n")
+    print(f"# wrote {path}", flush=True)
+    return path

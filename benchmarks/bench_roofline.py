@@ -54,6 +54,7 @@ def main():
         print("roofline_no_dryrun_records,0.0,{'hint': 'run python -m repro.launch.dryrun --all first'}")
     for row in rows:
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    return rows
 
 
 if __name__ == "__main__":

@@ -113,8 +113,10 @@ def run(n_graphs: int = 64, strict: bool = True):
 def main(strict: bool = False):
     # tolerate the benchmarks.run driver leaving its section name in argv
     n = int(sys.argv[1]) if len(sys.argv) > 1 and sys.argv[1].isdigit() else 64
-    for row in run(n, strict=strict):
+    rows = run(n, strict=strict)
+    for row in rows:
         print(f"{row['name']},{row['graphs_per_s']},{row['derived']}")
+    return rows
 
 
 if __name__ == "__main__":

@@ -57,8 +57,10 @@ def run():
 
 
 def main():
-    for row in run():
+    rows = run()
+    for row in rows:
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,26 +1,34 @@
 """Benchmark driver — one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines.  Sections:
+Prints ``name,us_per_call,derived`` CSV lines and, per section, writes the
+same rows machine-readably as ``BENCH_<section>.json`` (schema: name,
+config, metrics, timestamp — see benchmarks/bench_io.py) so the perf
+trajectory is tracked across PRs.  Sections:
   fig7   per-model GNN inference latency (engine vs dense-SpMM, stream vs batch)
   stream packed micro-batched streaming vs one-graph mode (QPS sweep)
   fig8   large-graph DGN (Cora/CiteSeer/PubMed sizes)
   fig9   NE/MP pipelining speed-ups (sweep + MolHIV + virtual node)
   table4 per-model resource footprint (params/FLOPs/bytes/VMEM tiles)
+  quant  fp32 vs int8/ap_fixed: logit error + packed throughput
   roofline  per-(arch x shape x mesh) dry-run roofline terms
 """
 import sys
 
 
 def main() -> None:
-    sections = sys.argv[1:] or ["fig9", "table4", "fig8", "fig7", "stream", "roofline"]
+    sections = sys.argv[1:] or [
+        "fig9", "table4", "fig8", "fig7", "stream", "quant", "roofline"
+    ]
     from benchmarks import (
         bench_fig7_latency,
         bench_fig8_large_graph,
         bench_fig9_pipeline,
+        bench_quant,
         bench_roofline,
         bench_stream_throughput,
         bench_table4_resources,
     )
+    from benchmarks.bench_io import write_bench_json
 
     mods = {
         "fig7": bench_fig7_latency,
@@ -28,11 +36,14 @@ def main() -> None:
         "fig9": bench_fig9_pipeline,
         "table4": bench_table4_resources,
         "stream": bench_stream_throughput,
+        "quant": bench_quant,
         "roofline": bench_roofline,
     }
     for s in sections:
         print(f"# --- {s} ---", flush=True)
-        mods[s].main()
+        rows = mods[s].main()
+        if rows and not getattr(mods[s], "WRITES_OWN_BENCH", False):
+            write_bench_json(s, rows, config={"argv": sys.argv[1:]})
 
 
 if __name__ == '__main__':

@@ -129,6 +129,22 @@ def synthetic_molecule(rng: np.random.Generator, stats: MoleculeStats):
     return s.astype(np.int32), r.astype(np.int32), nf, ef, np.float32(label)
 
 
+def laplacian_eigvec(s: np.ndarray, r: np.ndarray, n: int,
+                     n_pad: Optional[int] = None) -> np.ndarray:
+    """First non-trivial Laplacian eigenvector — DGN's precomputed *input*
+    (the paper passes eigenvectors as a model parameter; synthetic streams
+    compute it host-side as part of data generation)."""
+    a = np.zeros((n, n))
+    a[np.asarray(r), np.asarray(s)] = 1.0
+    a = np.maximum(a, a.T)
+    lap = np.diag(a.sum(1)) - a
+    _, v = np.linalg.eigh(lap)
+    vec = v[:, min(1, v.shape[1] - 1)]
+    out = np.zeros((n_pad if n_pad is not None else n,), np.float32)
+    out[:n] = vec
+    return out
+
+
 class MoleculeStream:
     """Deterministic stream of raw COO graphs — the paper's real-time input
     (graphs arrive consecutively, no preprocessing allowed)."""

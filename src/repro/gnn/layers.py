@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.quant import observers as qobs
+from repro.quant import qconfig as qc
 
 
 def glorot(rng, shape, dtype=jnp.float32):
@@ -26,7 +28,14 @@ def linear_init(rng, d_in: int, d_out: int) -> dict:
     return {"w": glorot(kw, (d_in, d_out)), "b": jnp.zeros((d_out,))}
 
 
-def linear_apply(p: dict, x: jax.Array, activation: str = "none", mode: str = "auto"):
+def linear_apply(p, x: jax.Array, activation: str = "none", mode: str = "auto"):
+    """Dense transform through the NE PE.  ``p`` is either a plain
+    ``{"w", "b"}`` dict (fp32 path) or a ``quant.QuantizedLinear`` (int8 /
+    ap_fixed path) — the quantization transform swaps nodes in the param
+    tree and every model picks the right kernel here."""
+    if isinstance(p, qc.QuantizedLinear):
+        return qc.quantized_linear(p, x, activation=activation, mode=mode)
+    qobs.observe_linear_input(p, x)  # no-op outside quant calibration
     return ops.node_mlp(x, p["w"], p["b"], activation=activation, mode=mode)
 
 

@@ -9,10 +9,17 @@ is backend-agnostic.  ``mode``:
   * "auto":      kernel on TPU, reference elsewhere
   * "kernel":    force Pallas (interpret=True off-TPU)
   * "reference": force pure-jnp oracle
+
+The ``REPRO_KERNEL_MODE`` environment variable, when set, overrides the
+per-call ``mode`` globally — benches/CI force the kernel or reference path
+without threading a flag through every config.  It is read at trace time:
+set it before building/jitting a program (an already-compiled program does
+not retrace when the variable changes).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +28,10 @@ from repro.kernels import ref
 from repro.kernels.edge_softmax import edge_softmax as _edge_softmax_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.node_mlp import node_mlp as _node_mlp_kernel
+from repro.kernels.quant_mlp import quant_node_mlp as _quant_mlp_kernel
 from repro.kernels.segment_reduce import segment_reduce_sorted as _segment_kernel
+
+_MODES = ("auto", "kernel", "reference")
 
 
 def _on_tpu() -> bool:
@@ -30,10 +40,19 @@ def _on_tpu() -> bool:
 
 def _resolve(mode: str):
     """-> (use_kernel, interpret)"""
+    env = os.environ.get("REPRO_KERNEL_MODE", "")
+    if env:
+        if env not in _MODES:
+            raise ValueError(
+                f"REPRO_KERNEL_MODE={env!r} invalid; expected one of {_MODES}"
+            )
+        mode = env
     if mode == "reference":
         return False, False
     if mode == "kernel":
         return True, not _on_tpu()
+    if mode != "auto":
+        raise ValueError(f"unknown kernel mode {mode!r}; expected one of {_MODES}")
     return (True, False) if _on_tpu() else (False, False)
 
 
@@ -73,6 +92,28 @@ def node_mlp(
     if not use_kernel:
         return ref.node_mlp_ref(x, w, b, activation)
     return _node_mlp_kernel(x, w, b, activation, interpret=interpret)
+
+
+def quant_node_mlp(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    scale: jax.Array,
+    b: jax.Array,
+    activation: str = "relu",
+    row_scale: jax.Array | None = None,
+    mode: str = "auto",
+) -> jax.Array:
+    """Quantized fused linear (int8 NE PE): int32 accumulate + requantize.
+
+    x_q (M, K) int8, w_q (K, N) int8, scale (N,)/() f32, row_scale
+    (M, 1) f32 or None (dynamic per-node scales), b (N,) f32.
+    """
+    use_kernel, interpret = _resolve(mode)
+    if not use_kernel:
+        return ref.quant_node_mlp_ref(x_q, w_q, scale, b, activation,
+                                      row_scale=row_scale)
+    return _quant_mlp_kernel(x_q, w_q, scale, b, activation,
+                             row_scale=row_scale, interpret=interpret)
 
 
 def edge_softmax(

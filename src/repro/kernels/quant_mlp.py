@@ -1,0 +1,116 @@
+"""Pallas TPU kernel for the quantized Node-Embedding PE: int8 matmul with
+int32 accumulation, fused requantize + bias + activation.
+
+The paper's PEs run entirely in ``ap_fixed`` arithmetic — narrow multiplies
+feeding a wider accumulator, rescaled once on the way out.  The TPU
+translation of the int8 serving path is the same shape:
+
+  * x (M, K) int8 activations, w (K, N) int8 weights feed the MXU with
+    ``preferred_element_type=int32`` — the wide accumulator;
+  * the K grid dimension accumulates int32 partial products in VMEM
+    scratch (exact: no rounding until the final rescale);
+  * the last K step applies the requantization in one fused tail:
+    ``y = acc * scale + b`` with ``scale = x_scale * w_scale`` (per-output-
+    channel), then the activation, writing the f32 output tile once.
+
+Tiling mirrors kernels/node_mlp.py (the fp32 NE PE); int8 tiles want a
+(32, 128) minimum so the default 128-blocks stay aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _qmlp_kernel(x_ref, w_ref, scale_ref, rs_ref, b_ref, out_ref, acc_ref, *,
+                 n_k: int, activation: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _finalize():
+        # (1, N) column scale x (M, 1) row scale broadcast into the tile
+        y = (acc_ref[...].astype(jnp.float32) * scale_ref[...] * rs_ref[...]
+             + b_ref[...])
+        if activation == "relu":
+            y = jnp.maximum(y, 0.0)
+        elif activation == "gelu":
+            y = jax.nn.gelu(y)
+        out_ref[...] = y.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "block_m", "block_n", "block_k", "interpret"),
+)
+def quant_node_mlp(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    scale: jax.Array,
+    b: jax.Array,
+    activation: str = "relu",
+    row_scale: jax.Array | None = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = act((x_q @ w_q) * scale * row_scale + b), int32 accumulation.
+
+    x_q: (M, K) int8; w_q: (K, N) int8; scale: (N,) or () f32 per-output-
+    channel requantization factor; row_scale: (M, 1) f32 per-row factor
+    (dynamic per-node activation scales; None -> 1); b: (N,) f32.  Zero
+    padding to block multiples is exact (int8 zeros contribute nothing).
+    """
+    if activation not in ("relu", "gelu", "none"):
+        raise ValueError(f"unknown activation {activation!r}")
+    m, kdim = x_q.shape
+    _, n = w_q.shape
+    mp = -(-m // block_m) * block_m
+    kp = -(-kdim // block_k) * block_k
+    np_ = -(-n // block_n) * block_n
+    if row_scale is None:
+        row_scale = jnp.ones((m, 1), jnp.float32)
+    if (mp, kp) != (m, kdim):
+        x_q = jnp.pad(x_q, ((0, mp - m), (0, kp - kdim)))
+    if mp != m:
+        row_scale = jnp.pad(row_scale, ((0, mp - m), (0, 0)))
+    if (kp, np_) != (kdim, n):
+        w_q = jnp.pad(w_q, ((0, kp - kdim), (0, np_ - n)))
+    scale = jnp.broadcast_to(scale.astype(jnp.float32), (n,))
+    if np_ != n:
+        scale = jnp.pad(scale, (0, np_ - n))
+        b = jnp.pad(b, (0, np_ - n))
+    scale2d = scale.reshape(1, np_)
+    b2d = b.astype(jnp.float32).reshape(1, np_)
+    grid = (mp // block_m, np_ // block_n, kp // block_k)
+    out = pl.pallas_call(
+        functools.partial(_qmlp_kernel, n_k=grid[2], activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+            pl.BlockSpec((block_m, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q, scale2d, row_scale.astype(jnp.float32), b2d)
+    return out[:m, :n]

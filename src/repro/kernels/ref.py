@@ -57,6 +57,41 @@ def node_mlp_ref(
     return y.astype(x.dtype)
 
 
+def quant_node_mlp_ref(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    scale: jax.Array,
+    b: jax.Array,
+    activation: str = "relu",
+    row_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Quantized fused linear (int8 NE PE): int32 accumulate, requantize.
+
+    x_q: (M, K) int8; w_q: (K, N) int8; scale: (N,) or () f32 per-output-
+    channel requantization factor; row_scale: (M, 1) f32 per-row factor
+    (dynamic per-node scales; None -> 1); b: (N,) f32.  The int32
+    accumulation is exact, so kernel and oracle agree bit-for-bit up to
+    the f32 rescale tail.
+    """
+    acc = jax.lax.dot_general(
+        x_q,
+        w_q,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    y = acc.astype(jnp.float32) * scale.astype(jnp.float32)
+    if row_scale is not None:
+        y = y * row_scale.astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "gelu":
+        y = jax.nn.gelu(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
 def edge_softmax_ref(
     logits: jax.Array, segment_ids: jax.Array, num_segments: int
 ) -> jax.Array:

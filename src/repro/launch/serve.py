@@ -52,7 +52,16 @@ def serve_gnn(args):
     if args.gnn_mesh > 1:
         # shard padded node/edge rows over a flat data axis
         mesh = RT.make_flat_mesh(args.gnn_mesh, axis="data")
-    eng = GNNEngine(cfg, params, mesh=mesh)
+    calib = None
+    if args.precision == "int8-static":
+        # calibration stream disjoint from the served one (seed split)
+        calib = [g[:4] for g in MoleculeStream(MOLHIV, seed=97).take(16)]
+    eng = GNNEngine(cfg, params, mesh=mesh, precision=args.precision,
+                    calib_graphs=calib)
+    if eng.quant_report is not None:
+        r = eng.quant_report
+        print(f"[quant] {args.precision}: {r.quantized} linears quantized, "
+              f"{r.kept_fp32} fp32 (skip: {list(r.skipped_paths)})")
     graphs = MoleculeStream(MOLHIV, seed=0).take(args.n_graphs)
     if args.stream:
         from repro.serve.scheduler import StreamScheduler
@@ -117,6 +126,13 @@ def main():
                     help="stream: packed budget = this many base buckets")
     ap.add_argument("--gnn-mesh", type=int, default=1,
                     help="GNN: shard node/edge rows over this many devices")
+    ap.add_argument("--precision",
+                    choices=("fp32", "int8", "int8-static", "fixed"),
+                    default="fp32",
+                    help="GNN serving arithmetic: fp32; int8 (dynamic "
+                         "per-node activation scales); int8-static "
+                         "(calibrated per-tensor scales); or the paper's "
+                         "ap_fixed<W,I> emulation")
     args = ap.parse_args()
     if args.gnn:
         serve_gnn(args)

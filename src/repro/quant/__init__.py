@@ -1,0 +1,44 @@
+"""Quantized inference subsystem — the paper's ``ap_fixed`` design axis.
+
+Layout (mirrors the calibrate -> transform -> serve flow):
+  * ``observers.py`` — activation-range calibration (min/max, percentile)
+    plus the forward-pass collection hook;
+  * ``qconfig.py``   — schemes (symmetric int8, ap_fixed<W,I> emulation),
+    the ``QuantizedLinear`` pytree node, and its forward;
+  * ``apply.py``     — the model-agnostic param-tree transform
+    (``quantize_model``) that makes all six GNN models run quantized.
+
+``apply`` is imported lazily: it pulls in the model library, which itself
+imports this package for the ``linear_apply`` dispatch.
+"""
+from repro.quant.observers import (  # noqa: F401
+    Collector,
+    MinMaxObserver,
+    PercentileObserver,
+    collecting,
+    make_observer,
+    observe_linear_input,
+)
+from repro.quant.qconfig import (  # noqa: F401
+    QConfig,
+    QuantizedLinear,
+    affine_act_params,
+    dequantize_int8,
+    fixed_round,
+    quantize_int8,
+    quantized_linear,
+    quantize_weight,
+    symmetric_scale,
+)
+
+_LAZY = ("calibrate", "quantize_params", "quantize_model",
+         "precision_qconfig", "QuantReport", "apply")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        _apply = importlib.import_module("repro.quant.apply")
+        return _apply if name == "apply" else getattr(_apply, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,239 @@
+"""Model-agnostic quantization transform: calibrate a trained param tree,
+then swap every eligible ``{"w", "b"}`` linear for a ``QuantizedLinear``.
+
+The transform operates purely on the parameter pytree — it never looks at
+model structure.  Eligibility is structural (a dict with a 2-D ``w`` and a
+``b``, exactly what ``gnn/layers.linear_init`` emits), activation ranges
+come from the calibration hook (``observers.collecting`` around an eager
+forward pass), and the quantized tree drops into the same
+``models.apply`` / ``GNNEngine`` code paths because
+``gnn/layers.linear_apply`` dispatches on the node type.  That is what
+makes one transform cover all six GNN models and every serving mode.
+
+    qparams, report = quantize_model(params, cfg, calib_graphs)
+    out = models.apply(qparams, graph, cfg)          # runs int8
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph as G
+from repro.data.pipeline import laplacian_eigvec
+from repro.gnn import models as M
+from repro.quant import observers as O
+from repro.quant import qconfig as Q
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantReport:
+    """What the transform did: audit trail for tests/benches."""
+
+    quantized: int  # linears swapped for QuantizedLinear
+    kept_fp32: int  # linears left alone (skip-listed or uncalibrated)
+    skipped_paths: Tuple[str, ...]
+    uncalibrated_paths: Tuple[str, ...]
+    scheme: str
+
+
+def _is_linear(node) -> bool:
+    return (
+        isinstance(node, dict)
+        and "w" in node
+        and "b" in node
+        and getattr(node["w"], "ndim", 0) == 2
+    )
+
+
+def calibrate(
+    params: dict,
+    cfg: M.GNNConfig,
+    graphs: Sequence[tuple],
+    qcfg: Optional[Q.QConfig] = None,
+    eigvecs: Optional[Sequence[np.ndarray]] = None,
+) -> O.Collector:
+    """Run an eager forward pass per calibration graph with the collection
+    hook active; returns the filled Collector (weight-id -> observer).
+
+    ``graphs`` are raw COO tuples ``(senders, receivers, node_feat,
+    edge_feat)``; DGN's eigenvector inputs are computed here when not
+    supplied (host-side, like the data pipeline does).
+    """
+    qcfg = qcfg or Q.QConfig()
+    collector = O.Collector(
+        lambda: O.make_observer(qcfg.observer, qcfg.percentile)
+    )
+    with O.collecting(collector):
+        for i, g in enumerate(graphs):
+            s, r, nf, ef = g[:4]
+            gp = G.from_numpy(s, r, nf, ef)
+            eig = None
+            if cfg.model == "dgn":
+                eig = (np.asarray(eigvecs[i], np.float32)[: nf.shape[0]]
+                       if eigvecs is not None
+                       else laplacian_eigvec(s, r, nf.shape[0]))
+                eig = jax.numpy.asarray(eig)
+            M.apply(params, gp, cfg, eigvec=eig, num_graphs=1)
+    return collector
+
+
+def _quantize_dynamic_linear(w, b, qcfg: Q.QConfig) -> Q.QuantizedLinear:
+    """One linear -> int8 ``QuantizedLinear`` with dynamic (per-row,
+    on-device) activation scales — no calibration statistics needed."""
+    w_q, w_scale = Q.quantize_weight(w, qcfg)
+    return Q.QuantizedLinear(
+        w_q=w_q, w_scale=w_scale, b=b.astype(jnp.float32),
+        x_scale=jnp.float32(1.0), scheme="int8", act_mode="dynamic",
+    )
+
+
+def _quantize_int8_linear(w, b, obs, qcfg: Q.QConfig) -> Q.QuantizedLinear:
+    """One calibrated linear -> static-activation int8 ``QuantizedLinear``.
+
+    Three standard tricks compose here, all resolved at transform time so
+    the runtime kernel stays a pure int8 matmul + one f32 tail:
+
+      1. SmoothQuant-style migration (``smooth_alpha``): activation
+         column k is divided by ``s_k = colabs_k^a / wrowmax_k^(1-a)``
+         and the factor is multiplied into weight row k before
+         quantizing — hot activation columns (GNN sum-aggregates have
+         heavy tails) stop dictating the per-tensor activation step.
+         Applied only when the columns are genuinely skewed
+         (max/median >= ``_SMOOTH_SKEW``): rescaling rows costs
+         weight-quantization accuracy (weight scales are per *output*
+         channel), a net loss for homogeneous activations.
+      2. Asymmetric activations: post-relu inputs use all 256 levels.
+      3. Zero-point folding: ``sum_k (x_q - zp) s_x w_q s_w`` expands to
+         ``s_x s_w (acc - zp * colsum(w_q))``; the correction is a
+         per-output-channel constant folded into the bias.
+    """
+    w_np = np.asarray(w, np.float32)
+    col = obs.col_range() if hasattr(obs, "col_range") else None
+    alpha = qcfg.smooth_alpha
+    skewed = False
+    if alpha > 0.0 and col is not None and col[0].shape[0] == w_np.shape[0]:
+        colmin, colmax = col
+        colabs = np.maximum(np.maximum(np.abs(colmin), np.abs(colmax)), _EPS)
+        skewed = float(colabs.max() / np.median(colabs)) >= _SMOOTH_SKEW
+    if skewed:
+        wrowmax = np.maximum(np.abs(w_np).max(axis=1), _EPS)
+        s = np.maximum(colabs ** alpha / wrowmax ** (1.0 - alpha), _EPS)
+        x_premul = jnp.asarray((1.0 / s).astype(np.float32))
+        lo = float((colmin / s).min())
+        hi = float((colmax / s).max())
+        w_eff = jnp.asarray(w_np * s[:, None])
+    else:
+        x_premul = jnp.float32(1.0)
+        lo, hi = obs.range()
+        w_eff = w
+    w_q, w_scale = Q.quantize_weight(w_eff, qcfg)
+    x_scale, x_zero = Q.affine_act_params(lo, hi, qcfg.asymmetric_acts)
+    # fold the zero-point matmul correction into the bias
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0).astype(jnp.float32)
+    b_eff = (b.astype(jnp.float32)
+             - (x_scale * x_zero) * w_scale.astype(jnp.float32) * colsum)
+    return Q.QuantizedLinear(
+        w_q=w_q, w_scale=w_scale, b=b_eff,
+        x_scale=jnp.float32(x_scale), x_premul=x_premul,
+        x_zero=jnp.float32(x_zero), scheme="int8", act_mode="static",
+    )
+
+
+_EPS = 1e-6
+_SMOOTH_SKEW = 8.0  # hottest column >= this x median before migration pays
+
+
+def quantize_params(
+    params: dict,
+    collector: Optional[O.Collector],
+    qcfg: Q.QConfig,
+) -> Tuple[dict, QuantReport]:
+    """Swap calibrated linears for ``QuantizedLinear`` nodes.
+
+    Top-level keys in ``qcfg.skip`` stay fp32 (default: the prediction
+    head).  Static-activation int8 linears that were never exercised
+    during calibration also stay fp32 (recorded in the report) —
+    correctness first.  The "fixed" scheme and dynamic-activation int8
+    need no activation statistics, so they never leave a layer behind.
+    """
+    skipped: List[str] = []
+    uncalibrated: List[str] = []
+    counts = {"q": 0, "fp32": 0}
+
+    def transform(node, path):
+        if _is_linear(node):
+            if path and path[0] in qcfg.skip:
+                skipped.append("/".join(path))
+                counts["fp32"] += 1
+                return node
+            w, b = node["w"], node["b"]
+            if qcfg.scheme == "fixed":
+                w_q, lsb = Q.quantize_weight(w, qcfg)
+                counts["q"] += 1
+                return Q.QuantizedLinear(
+                    w_q=w_q, w_scale=lsb,
+                    b=Q.fixed_round(b, qcfg.word_bits, qcfg.int_bits),
+                    x_scale=lsb, scheme="fixed",
+                    word_bits=qcfg.word_bits, int_bits=qcfg.int_bits,
+                )
+            if qcfg.act_mode == "dynamic":
+                counts["q"] += 1
+                return _quantize_dynamic_linear(w, b, qcfg)
+            obs = (collector.observers.get(id(w))
+                   if collector is not None else None)
+            if obs is None or getattr(obs, "count", 0) == 0:
+                uncalibrated.append("/".join(path))
+                counts["fp32"] += 1
+                return node
+            counts["q"] += 1
+            return _quantize_int8_linear(w, b, obs, qcfg)
+        if isinstance(node, dict):
+            return {k: transform(v, path + (str(k),)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            seq = [transform(v, path + (str(i),)) for i, v in enumerate(node)]
+            return type(node)(seq) if isinstance(node, tuple) else seq
+        return node
+
+    qparams = transform(params, ())
+    report = QuantReport(
+        quantized=counts["q"],
+        kept_fp32=counts["fp32"],
+        skipped_paths=tuple(skipped),
+        uncalibrated_paths=tuple(uncalibrated),
+        scheme=qcfg.scheme,
+    )
+    return qparams, report
+
+
+def quantize_model(
+    params: dict,
+    cfg: M.GNNConfig,
+    calib_graphs: Sequence[tuple],
+    qcfg: Optional[Q.QConfig] = None,
+    eigvecs: Optional[Sequence[np.ndarray]] = None,
+) -> Tuple[dict, QuantReport]:
+    """Calibrate (when the scheme needs it) + transform in one call —
+    what ``GNNEngine`` uses."""
+    qcfg = qcfg or Q.QConfig()
+    collector = None
+    if qcfg.scheme == "int8" and qcfg.act_mode == "static":
+        collector = calibrate(params, cfg, calib_graphs, qcfg, eigvecs=eigvecs)
+    return quantize_params(params, collector, qcfg)
+
+
+def precision_qconfig(precision: str) -> Q.QConfig:
+    """Map an engine/CLI ``precision`` name to its default QConfig."""
+    if precision == "int8":
+        return Q.QConfig(scheme="int8", act_mode="dynamic")
+    if precision == "int8-static":
+        return Q.QConfig(scheme="int8", act_mode="static")
+    if precision == "fixed":
+        return Q.QConfig(scheme="fixed")
+    raise ValueError(
+        f"unknown precision {precision!r}; expected "
+        "fp32|int8|int8-static|fixed"
+    )

@@ -1,0 +1,231 @@
+"""Quantization schemes and the quantized-parameter representation.
+
+GenGNN's on-FPGA arithmetic is entirely ``ap_fixed`` — the paper's word
+length W and integer width I are the precision knob of the whole design.
+This module gives the JAX reproduction two reduced-precision schemes:
+
+  * ``"int8"``  — W8A8: per-channel symmetric weights, int8 activations,
+    int8 x int8 -> int32 accumulate with one fused f32 requantize tail
+    (``kernels/quant_mlp.py`` is the MXU kernel, ``kernels/ref.py`` the
+    oracle).  Activations come in two modes: ``act_mode="dynamic"``
+    (default) computes a per-row — per-node — scale on device, the
+    per-token W8A8 recipe production int8 serving uses, and needs no
+    calibration; ``act_mode="static"`` uses one calibrated per-tensor
+    affine scale (observers + zero-point folded into the bias +
+    SmoothQuant-style migration of hot columns into the weights), the
+    FPGA-faithful fixed-scale regime.
+  * ``"fixed"`` — ``ap_fixed<W,I>`` *emulation* matching the paper's knob:
+    weights and activations are snapped to the 2^(I-W) grid with
+    saturation, the matmul runs in f32 (standing in for the paper's wide
+    fixed-point accumulator), and the output is snapped again.
+
+A quantized linear layer is a ``QuantizedLinear`` pytree node; the model
+library (``gnn/layers.linear_apply``) dispatches on it, so a transformed
+param tree runs through all six GNN models and every engine mode with no
+model-specific code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+SCHEMES = ("int8", "fixed")
+
+
+@dataclasses.dataclass(frozen=True)
+class QConfig:
+    """One quantization recipe (the engine's ``precision`` resolves to one).
+
+    scheme:       "int8" | "fixed"
+    act_mode:     int8 activation scales: "dynamic" (per-row, computed on
+                  device, no calibration) | "static" (per-tensor, from
+                  calibration observers)
+    granularity:  weight scale granularity, "per_channel" | "per_tensor"
+    observer:     static-mode range estimator, "minmax" | "percentile".
+                  minmax is the default: GNN sum-aggregates have heavy
+                  tails that carry real signal, and clipping them
+                  (percentile) measurably hurts logit error here.
+    percentile:   absolute-value percentile for the percentile observer
+    asymmetric_acts:  static mode: affine (zero-point) activation
+                  quantization for one-sided (post-relu) ranges; the
+                  zero-point never reaches the kernel — its correction
+                  term is folded into the bias at transform time.
+    smooth_alpha: static mode: SmoothQuant migration strength for skewed
+                  activation columns (folded into the weights).  0
+                  disables.
+    word_bits/int_bits:  the ap_fixed<W,I> knob (scheme="fixed")
+    skip:         top-level param-tree keys kept in fp32.  The prediction
+                  head stays fp32 by default (the classic first/last-layer
+                  rule: logits are the most sign-sensitive tensor and the
+                  head is a negligible share of FLOPs).
+    """
+
+    scheme: str = "int8"
+    act_mode: str = "dynamic"
+    granularity: str = "per_channel"
+    observer: str = "minmax"
+    percentile: float = 99.9
+    asymmetric_acts: bool = True
+    smooth_alpha: float = 0.25
+    word_bits: int = 16
+    int_bits: int = 6
+    skip: Tuple[str, ...] = ("head",)
+
+    def __post_init__(self):
+        if self.scheme not in SCHEMES:
+            raise ValueError(f"unknown scheme {self.scheme!r}; expected {SCHEMES}")
+        if self.act_mode not in ("dynamic", "static"):
+            raise ValueError(f"unknown act_mode {self.act_mode!r}")
+        if self.granularity not in ("per_channel", "per_tensor"):
+            raise ValueError(f"unknown granularity {self.granularity!r}")
+        if not 1 <= self.int_bits < self.word_bits:
+            raise ValueError(
+                f"ap_fixed<{self.word_bits},{self.int_bits}> needs "
+                f"1 <= int_bits < word_bits"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedLinear:
+    """A quantized ``{"w", "b"}`` linear layer (pytree node).
+
+    int8 dynamic: w_q int8 (K, N); w_scale f32 (N,) or (); activation
+           scales are computed per row at run time (x_scale/x_zero/
+           x_premul unused: 1 / 0 / 1); b f32.
+    int8 static:  x_scale f32 () and x_zero f32 () from calibration
+           (zero-point; its matmul correction is pre-folded into ``b``);
+           x_premul f32 (K,) or () SmoothQuant per-column divisor (1 when
+           disabled); b f32 effective bias.
+    fixed: w_q f32 (K, N) snapped to the ap_fixed grid; w_scale/x_scale
+           hold the grid LSB 2^(I-W); b snapped f32; x_premul/x_zero
+           unused (1 / 0).
+    """
+
+    w_q: Any
+    w_scale: Any
+    b: Any
+    x_scale: Any
+    x_premul: Any = 1.0
+    x_zero: Any = 0.0
+    scheme: str = "int8"
+    act_mode: str = "dynamic"
+    word_bits: int = 16
+    int_bits: int = 6
+
+    @property
+    def shape(self):
+        return self.w_q.shape
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedLinear,
+    lambda q: ((q.w_q, q.w_scale, q.b, q.x_scale, q.x_premul, q.x_zero),
+               (q.scheme, q.act_mode, q.word_bits, q.int_bits)),
+    lambda aux, kids: QuantizedLinear(*kids, *aux),
+)
+
+
+# ---------------------------------------------------------------------------
+# scheme arithmetic
+# ---------------------------------------------------------------------------
+
+_EPS = 1e-8
+
+
+def symmetric_scale(lo, hi, qmax: int = 127):
+    """Symmetric range -> positive quantization step (elementwise-safe)."""
+    bound = jnp.maximum(jnp.abs(jnp.asarray(lo)), jnp.abs(jnp.asarray(hi)))
+    return jnp.maximum(bound, _EPS) / float(qmax)
+
+
+def quantize_int8(x: jax.Array, scale, zero=0.0) -> jax.Array:
+    """Round-to-nearest affine int8 with saturation (zero=0 -> symmetric)."""
+    q = jnp.round(x.astype(jnp.float32) / scale) + zero
+    return jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
+
+
+def affine_act_params(lo, hi, asymmetric: bool):
+    """-> (x_scale, x_zero) for the activation quantizer.
+
+    Asymmetric (zero-point) quantization maps [lo, hi] onto the full 256
+    levels — but only when the range is mostly one-sided (post-relu
+    inputs), where it doubles the resolution.  For roughly symmetric
+    ranges it is applied as symmetric: the resolution gain is nil there,
+    while the exact-fit range clips harder on under-calibrated tails (the
+    symmetric form keeps headroom on the narrow side).
+    """
+    lo = float(min(lo, 0.0))
+    hi = float(max(hi, 0.0))
+    one_sided = (-lo <= 0.25 * hi) or (hi <= 0.25 * -lo)
+    if asymmetric and one_sided:
+        scale = max(hi - lo, _EPS) / 255.0
+        zero = -128.0 - round(lo / scale)
+        return scale, zero
+    return float(symmetric_scale(lo, hi)), 0.0
+
+
+def dequantize_int8(x_q: jax.Array, scale) -> jax.Array:
+    return x_q.astype(jnp.float32) * scale
+
+
+def fixed_round(x: jax.Array, word_bits: int, int_bits: int) -> jax.Array:
+    """Snap to the ap_fixed<W,I> grid: LSB 2^(I-W), saturating range
+    [-2^(I-1), 2^(I-1) - LSB] (I includes the sign bit, as in HLS)."""
+    lsb = 2.0 ** (int_bits - word_bits)
+    qmax = 2.0 ** (word_bits - 1) - 1.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / lsb), -(qmax + 1.0), qmax)
+    return q * lsb
+
+
+def quantize_weight(w: jax.Array, qcfg: QConfig):
+    """-> (w_q, w_scale) under ``qcfg`` (weights need no observer: their
+    range is known exactly at transform time)."""
+    if qcfg.scheme == "fixed":
+        lsb = jnp.float32(2.0 ** (qcfg.int_bits - qcfg.word_bits))
+        return fixed_round(w, qcfg.word_bits, qcfg.int_bits), lsb
+    axis = 0 if qcfg.granularity == "per_channel" else None
+    bound = jnp.max(jnp.abs(w), axis=axis)
+    scale = jnp.maximum(bound, _EPS) / 127.0
+    return quantize_int8(w, scale), scale.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# the quantized forward (dispatched from gnn/layers.linear_apply)
+# ---------------------------------------------------------------------------
+
+
+def quantized_linear(q: QuantizedLinear, x: jax.Array,
+                     activation: str = "none", mode: str = "auto") -> jax.Array:
+    """Forward one quantized linear layer: f32 in, f32 out.
+
+    int8 dynamic: compute the per-row (per-node) scale on device —
+    exact-range symmetric quantization per row, requantized by the
+    (row_scale x w_scale) outer product in the kernel's fused tail.
+    int8 static: apply the SmoothQuant per-column divisor, quantize with
+    the calibrated static (scale, zero-point), requantize by
+    ``x_scale * w_scale`` — the zero-point correction is already folded
+    into ``q.b``, so the kernel never sees it.  fixed: snap input to the
+    grid, run the fp32 NE PE (the wide accumulator), snap the output.
+    """
+    if q.scheme == "fixed":
+        x_f = fixed_round(x, q.word_bits, q.int_bits)
+        y = ops.node_mlp(x_f, q.w_q, q.b, activation=activation, mode=mode)
+        return fixed_round(y, q.word_bits, q.int_bits)
+    if q.act_mode == "dynamic":
+        rs = jnp.maximum(
+            jnp.max(jnp.abs(x), axis=1, keepdims=True), _EPS
+        ).astype(jnp.float32) / 127.0
+        x_q = quantize_int8(x, rs)
+        return ops.quant_node_mlp(
+            x_q, q.w_q, q.w_scale.astype(jnp.float32), q.b,
+            activation=activation, row_scale=rs, mode=mode,
+        )
+    x_q = quantize_int8(x * q.x_premul, q.x_scale, q.x_zero)
+    scale = (q.x_scale * q.w_scale).astype(jnp.float32)
+    return ops.quant_node_mlp(x_q, q.w_q, scale, q.b,
+                              activation=activation, mode=mode)

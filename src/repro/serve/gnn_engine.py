@@ -61,8 +61,34 @@ class GNNEngine:
         buckets: Sequence[tuple] = DEFAULT_BUCKETS,
         mesh=None,
         rules: Optional[dict] = None,
+        precision: str = "fp32",
+        calib_graphs: Optional[Sequence[tuple]] = None,
+        qconfig=None,
     ):
+        """``precision`` selects the serving arithmetic: "fp32" (default),
+        "int8" (W8A8 with dynamic per-node activation scales; no
+        calibration needed), "int8-static" (calibrated per-tensor
+        activation scales; requires ``calib_graphs``, a few raw COO
+        tuples), or "fixed" (the paper's ap_fixed<W,I> emulation).
+        Quantization happens once here — every mode (stream / batched /
+        packed, with or without a mesh) then serves the transformed params
+        through the identical bucket/compile machinery."""
         self.cfg = cfg
+        self.precision = precision
+        self.quant_report = None
+        if precision != "fp32":
+            from repro.quant import apply as QA
+
+            qcfg = qconfig or QA.precision_qconfig(precision)
+            if (qcfg.scheme == "int8" and qcfg.act_mode == "static"
+                    and not calib_graphs):
+                raise ValueError(
+                    "static-activation int8 needs calib_graphs (raw COO "
+                    "tuples) to calibrate activation ranges"
+                )
+            params, self.quant_report = QA.quantize_model(
+                params, cfg, calib_graphs or (), qcfg
+            )
         self.params = params
         self.buckets = sorted(buckets)
         self.mesh = mesh
@@ -235,15 +261,6 @@ class GNNEngine:
         """First non-trivial Laplacian eigenvector — DGN's *input* (the
         paper passes precomputed eigenvectors as a parameter; for synthetic
         streams we compute it on the host as part of data generation)."""
-        import numpy.linalg as la
+        from repro.data.pipeline import laplacian_eigvec
 
-        a = np.zeros((n, n))
-        a[r, s] = 1.0
-        a = np.maximum(a, a.T)
-        d = np.diag(a.sum(1))
-        lap = d - a
-        w, v = la.eigh(lap)
-        vec = v[:, min(1, v.shape[1] - 1)]
-        out = np.zeros((n_pad,), np.float32)
-        out[:n] = vec
-        return jnp.asarray(out)
+        return jnp.asarray(laplacian_eigvec(s, r, n, n_pad))

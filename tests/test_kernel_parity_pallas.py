@@ -1,0 +1,127 @@
+"""Interpret-mode parity for the ``node_mlp`` and ``edge_softmax`` Pallas
+kernels against the pure-jnp oracles (kernels/ref.py) — the same two-layer
+coverage ``segment_reduce`` already has (test_segment_reduce_pallas.py):
+the raw kernel contract under ragged shapes / explicit block sizes, and
+the public ``ops.*(mode="kernel")`` semantics including padding and
+empty-segment edge cases the model layers rely on."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.edge_softmax import edge_softmax as raw_edge_softmax
+from repro.kernels.node_mlp import node_mlp as raw_node_mlp
+from repro.kernels.ops import edge_softmax, node_mlp
+
+RNG = np.random.default_rng(21)
+
+
+# ----------------------------------------------------------------- node_mlp
+
+
+@pytest.mark.parametrize("act", ["relu", "gelu", "none"])
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk",
+    [
+        (64, 64, 64, 64, 64, 64),  # clean multiples of every block
+        (100, 130, 50, 64, 64, 64),  # all three dims ragged
+        (8, 16, 8, 128, 128, 128),  # smaller than one block
+        (130, 64, 200, 64, 128, 32),  # K split across several tiles
+    ],
+)
+def test_raw_node_mlp_matches_oracle(act, m, k, n, bm, bn, bk):
+    x = jnp.asarray(RNG.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(k, n)) * 0.1, jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    got = raw_node_mlp(x, w, b, act, block_m=bm, block_n=bn, block_k=bk,
+                       interpret=True)
+    want = ref.node_mlp_ref(x, w, b, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_raw_node_mlp_bfloat16_accumulates_in_f32():
+    x = jnp.asarray(RNG.normal(size=(64, 96)), jnp.bfloat16)
+    w = jnp.asarray(RNG.normal(size=(96, 32)) * 0.1, jnp.bfloat16)
+    b = jnp.asarray(RNG.normal(size=(32,)), jnp.float32)
+    got = raw_node_mlp(x, w, b, "relu", interpret=True)
+    want = ref.node_mlp_ref(x, w, b, "relu")
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_public_node_mlp_zero_rows_passthrough():
+    # padded node rows are all-zero: relu(0*w + b) must be relu(b)
+    w = jnp.asarray(RNG.normal(size=(16, 8)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(8,)), jnp.float32)
+    out = node_mlp(jnp.zeros((4, 16)), w, b, "relu", mode="kernel")
+    np.testing.assert_allclose(
+        np.asarray(out), np.tile(np.maximum(np.asarray(b), 0.0), (4, 1)),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+# -------------------------------------------------------------- edge_softmax
+
+
+def _sorted_ids(e, n, pad_tail=0, skip_even=False):
+    pool = np.arange(1, n, 2) if skip_even else np.arange(n)
+    ids = np.sort(RNG.choice(pool, size=e)).astype(np.int32)
+    if pad_tail:
+        ids[-pad_tail:] = n
+    return ids
+
+
+@pytest.mark.parametrize("h", [1, 4])
+@pytest.mark.parametrize("e,n", [(64, 16), (300, 70), (37, 19), (513, 129)])
+def test_raw_edge_softmax_matches_oracle(h, e, n):
+    ids = _sorted_ids(e, n, pad_tail=max(e // 10, 1))
+    logits = jnp.asarray(RNG.normal(size=(e, h)) * 3, jnp.float32)
+    got = raw_edge_softmax(logits, jnp.asarray(ids), n, interpret=True)
+    want = ref.edge_softmax_ref(logits, jnp.asarray(ids), n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_edge_softmax_empty_segments_and_padding():
+    # only odd segments populated + a padding tail: weights of real edges
+    # sum to 1 per populated segment, padding edges get exactly 0
+    ids = _sorted_ids(96, 20, pad_tail=9, skip_even=True)
+    logits = jnp.asarray(RNG.normal(size=(96, 2)) * 3, jnp.float32)
+    w = edge_softmax(logits, jnp.asarray(ids), 20, mode="kernel")
+    np.testing.assert_allclose(
+        np.asarray(w),
+        np.asarray(ref.edge_softmax_ref(logits, jnp.asarray(ids), 20)),
+        rtol=1e-5, atol=1e-6,
+    )
+    assert float(np.abs(np.asarray(w)[-9:]).max()) == 0.0
+    sums = ref.segment_reduce_sorted_ref(w, jnp.asarray(ids), 20, "sum")
+    counts = ref.segment_reduce_sorted_ref(
+        jnp.ones_like(w), jnp.asarray(ids), 20, "sum"
+    )
+    np.testing.assert_allclose(
+        np.asarray(sums), np.asarray((counts > 0).astype(np.float32)),
+        atol=1e-5,
+    )
+
+
+def test_edge_softmax_all_edges_padding():
+    ids = jnp.full((16,), 8, jnp.int32)  # every edge masked out
+    logits = jnp.asarray(RNG.normal(size=(16, 3)), jnp.float32)
+    w = edge_softmax(logits, ids, 8, mode="kernel")
+    np.testing.assert_array_equal(np.asarray(w), np.zeros((16, 3), np.float32))
+
+
+def test_edge_softmax_extreme_logits_stable():
+    # the max-shift must keep exp() finite even for +/-1e4 logits
+    ids = jnp.asarray([0, 0, 0, 1, 1, 2], jnp.int32)
+    logits = jnp.asarray([[1e4], [1e4 - 1.0], [-1e4], [5.0], [-5.0], [0.0]],
+                         jnp.float32)
+    w = edge_softmax(logits, ids, 3, mode="kernel")
+    assert np.isfinite(np.asarray(w)).all()
+    want = ref.edge_softmax_ref(logits, ids, 3)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)

@@ -10,6 +10,41 @@ from repro.kernels import ops, ref
 RNG = np.random.default_rng(42)
 
 
+class TestKernelModeEnvOverride:
+    """REPRO_KERNEL_MODE globally overrides the per-call ``mode`` so
+    benches/CI can force a path without threading flags through configs."""
+
+    def test_env_forces_reference(self, monkeypatch):
+        monkeypatch.setenv("REPRO_KERNEL_MODE", "reference")
+        assert ops._resolve("kernel") == (False, False)
+        assert ops._resolve("auto") == (False, False)
+
+    def test_env_forces_kernel(self, monkeypatch):
+        monkeypatch.setenv("REPRO_KERNEL_MODE", "kernel")
+        use_kernel, interpret = ops._resolve("reference")
+        assert use_kernel and interpret == (jax.default_backend() != "tpu")
+
+    def test_unset_env_leaves_mode_alone(self, monkeypatch):
+        monkeypatch.delenv("REPRO_KERNEL_MODE", raising=False)
+        assert ops._resolve("reference") == (False, False)
+
+    def test_invalid_env_raises(self, monkeypatch):
+        monkeypatch.setenv("REPRO_KERNEL_MODE", "fastest")
+        with pytest.raises(ValueError, match="REPRO_KERNEL_MODE"):
+            ops._resolve("auto")
+
+    def test_functional_through_public_op(self, monkeypatch):
+        x = jnp.asarray(RNG.normal(size=(8, 8)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(8, 8)), jnp.float32)
+        b = jnp.zeros((8,), jnp.float32)
+        monkeypatch.setenv("REPRO_KERNEL_MODE", "reference")
+        got = ops.node_mlp(x, w, b, "none", mode="kernel")
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.node_mlp_ref(x, w, b, "none")),
+            rtol=1e-6, atol=1e-6,
+        )
+
+
 def _sorted_ids(e, n, pad_frac=0.1):
     ids = np.sort(RNG.integers(0, n, e)).astype(np.int32)
     k = int(e * pad_frac)

@@ -1,0 +1,391 @@
+"""Quantized inference subsystem: scheme arithmetic, observers, the int8
+Pallas kernel vs its jnp oracle, the model-agnostic param transform, and
+engine-wide precision plumbing (stream + packed, zero recompiles)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.quant import observers as O
+from repro.quant import qconfig as Q
+
+RNG = np.random.default_rng(11)
+
+
+# ---------------------------------------------------------------- schemes
+
+
+def test_fixed_round_snaps_to_grid_and_saturates():
+    w, i = 8, 3  # ap_fixed<8,3>: lsb 2^-5, range [-4, 4 - 2^-5]
+    lsb = 2.0 ** (i - w)
+    x = jnp.asarray([0.0, 0.017, -0.017, 3.99, 100.0, -100.0], jnp.float32)
+    y = np.asarray(Q.fixed_round(x, w, i))
+    assert np.all(np.abs(np.round(y / lsb) - y / lsb) < 1e-6)  # on grid
+    assert y[3] <= 4.0 - lsb and y[4] == pytest.approx(4.0 - lsb)
+    assert y[5] == pytest.approx(-4.0)
+    # idempotent: snapping a snapped value is a no-op
+    np.testing.assert_array_equal(np.asarray(Q.fixed_round(jnp.asarray(y), w, i)), y)
+
+
+def test_int8_roundtrip_error_bounded_by_half_step():
+    x = jnp.asarray(RNG.uniform(-2.0, 2.0, size=(64, 32)), jnp.float32)
+    scale = Q.symmetric_scale(-2.0, 2.0)
+    back = Q.dequantize_int8(Q.quantize_int8(x, scale), scale)
+    assert float(jnp.abs(x - back).max()) <= float(scale) / 2 + 1e-7
+
+
+def test_symmetric_scale_zero_range_is_positive():
+    assert float(Q.symmetric_scale(0.0, 0.0)) > 0.0
+
+
+def test_quantize_weight_per_channel_vs_per_tensor():
+    w = jnp.asarray(RNG.normal(size=(16, 8)) * [1, 2, 4, 8, 1, 2, 4, 8],
+                    jnp.float32)
+    wq_c, sc_c = Q.quantize_weight(w, Q.QConfig(granularity="per_channel"))
+    wq_t, sc_t = Q.quantize_weight(w, Q.QConfig(granularity="per_tensor"))
+    assert sc_c.shape == (8,) and sc_t.shape == ()
+    err_c = float(jnp.abs(Q.dequantize_int8(wq_c, sc_c) - w).max())
+    err_t = float(jnp.abs(Q.dequantize_int8(wq_t, sc_t) - w).max())
+    assert err_c < err_t  # per-channel adapts to the column scales
+
+
+def test_affine_act_params_asymmetric_uses_full_range():
+    scale, zero = Q.affine_act_params(0.0, 2.55, True)
+    assert scale == pytest.approx(2.55 / 255.0)
+    assert zero == -128.0
+    assert int(Q.quantize_int8(jnp.float32(0.0), scale, zero)) == -128
+    assert int(Q.quantize_int8(jnp.float32(2.55), scale, zero)) == 127
+    # symmetric keeps zero at 0
+    scale_s, zero_s = Q.affine_act_params(-1.0, 1.0, False)
+    assert zero_s == 0.0 and int(Q.quantize_int8(jnp.float32(0.0), scale_s)) == 0
+
+
+def test_zero_point_fold_matches_fp32_on_relu_range():
+    from repro.quant.apply import _quantize_int8_linear
+
+    w = jnp.asarray(RNG.normal(size=(24, 12)) * 0.2, jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(12,)), jnp.float32)
+    x = jnp.asarray(RNG.uniform(0.0, 4.0, size=(16, 24)), jnp.float32)
+    obs = O.MinMaxObserver()
+    obs.update(np.asarray(x))
+    q = _quantize_int8_linear(w, b, obs, Q.QConfig(smooth_alpha=0.0))
+    assert float(q.x_zero) != 0.0  # non-negative range -> shifted zero-point
+    got = Q.quantized_linear(q, x, activation="none", mode="reference")
+    want = ref.node_mlp_ref(x, w, b, "none")
+    assert float(jnp.abs(got - want).max()) < 0.05
+
+
+def test_smoothquant_migration_reduces_error_on_skewed_columns():
+    from repro.quant.apply import _quantize_int8_linear
+
+    colscale = np.where(np.arange(32) % 8 == 0, 50.0, 0.5)
+    x = jnp.asarray(RNG.normal(size=(64, 32)) * colscale, jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(32, 16)) * 0.2, jnp.float32)
+    b = jnp.zeros((16,), jnp.float32)
+    obs = O.MinMaxObserver()
+    obs.update(np.asarray(x))
+    want = ref.node_mlp_ref(x, w, b, "none")
+    errs = {}
+    for alpha in (0.0, 0.5):
+        q = _quantize_int8_linear(w, b, obs, Q.QConfig(smooth_alpha=alpha))
+        got = Q.quantized_linear(q, x, activation="none", mode="reference")
+        errs[alpha] = float(jnp.abs(got - want).mean())
+    assert errs[0.5] < 0.5 * errs[0.0]  # migration tames the hot columns
+    q = _quantize_int8_linear(w, b, obs, Q.QConfig(smooth_alpha=0.5))
+    assert q.x_premul.shape == (32,)
+
+
+# -------------------------------------------------------------- observers
+
+
+def test_minmax_observer_tracks_extremes_across_updates():
+    obs = O.MinMaxObserver()
+    obs.update(np.asarray([1.0, 2.0]))
+    obs.update(np.asarray([-3.0, 0.5]))
+    assert obs.range() == (-3.0, 2.0)
+
+
+def test_percentile_observer_clips_outlier_tail():
+    obs = O.PercentileObserver(percentile=99.0)
+    obs.update(np.concatenate([RNG.uniform(-1, 1, 10_000), [1e6]]))
+    lo, hi = obs.range()
+    assert hi < 2.0 and lo == -hi
+
+
+def test_observer_raises_without_data():
+    with pytest.raises(ValueError):
+        O.MinMaxObserver().range()
+
+
+def test_collector_hook_records_per_weight(monkeypatch):
+    from repro.gnn import layers as L
+
+    p1 = L.linear_init(jax.random.PRNGKey(0), 4, 4)
+    p2 = L.linear_init(jax.random.PRNGKey(1), 4, 4)
+    coll = O.Collector(O.MinMaxObserver)
+    with O.collecting(coll):
+        L.linear_apply(p1, jnp.ones((3, 4)))
+        L.linear_apply(p2, 2.0 * jnp.ones((3, 4)))
+        L.linear_apply(p1, -jnp.ones((3, 4)))
+    assert set(coll.observers) == {id(p1["w"]), id(p2["w"])}
+    assert coll.observers[id(p1["w"])].range() == (-1.0, 1.0)
+    assert coll.observers[id(p2["w"])].range() == (2.0, 2.0)
+    # hook is inert outside the context
+    L.linear_apply(p1, 5.0 * jnp.ones((3, 4)))
+    assert coll.observers[id(p1["w"])].range() == (-1.0, 1.0)
+
+
+# ------------------------------------------------------------ int8 kernel
+
+
+@pytest.mark.parametrize("act", ["relu", "gelu", "none"])
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (37, 130, 50), (128, 256, 384)])
+def test_quant_node_mlp_kernel_matches_oracle(act, m, k, n):
+    x_q = jnp.asarray(RNG.integers(-127, 128, size=(m, k)), jnp.int8)
+    w_q = jnp.asarray(RNG.integers(-127, 128, size=(k, n)), jnp.int8)
+    scale = jnp.asarray(RNG.uniform(1e-3, 1e-2, size=(n,)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    got = ops.quant_node_mlp(x_q, w_q, scale, b, act, mode="kernel")
+    want = ref.quant_node_mlp_ref(x_q, w_q, scale, b, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (37, 130, 50)])
+def test_quant_node_mlp_kernel_row_scales_match_oracle(m, k, n):
+    x_q = jnp.asarray(RNG.integers(-127, 128, size=(m, k)), jnp.int8)
+    w_q = jnp.asarray(RNG.integers(-127, 128, size=(k, n)), jnp.int8)
+    scale = jnp.asarray(RNG.uniform(1e-3, 1e-2, size=(n,)), jnp.float32)
+    rs = jnp.asarray(RNG.uniform(1e-3, 1e-1, size=(m, 1)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    got = ops.quant_node_mlp(x_q, w_q, scale, b, "relu",
+                             row_scale=rs, mode="kernel")
+    want = ref.quant_node_mlp_ref(x_q, w_q, scale, b, "relu", row_scale=rs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_quant_node_mlp_int32_accumulation_is_exact():
+    # scale 1, bias 0: output must be the exact integer accumulator
+    x_q = jnp.asarray(RNG.integers(-127, 128, size=(40, 96)), jnp.int8)
+    w_q = jnp.asarray(RNG.integers(-127, 128, size=(96, 24)), jnp.int8)
+    got = ops.quant_node_mlp(
+        x_q, w_q, jnp.float32(1.0), jnp.zeros((24,)), "none", mode="kernel"
+    )
+    want = np.asarray(x_q, np.int64) @ np.asarray(w_q, np.int64)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+def test_quantized_linear_static_matches_fp32_within_step():
+    rng = np.random.default_rng(3)
+    p = {"w": jnp.asarray(rng.normal(size=(32, 16)) * 0.2, jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(16,)), jnp.float32)}
+    # keep x inside the calibrated range: out-of-range values saturate by
+    # design and would dominate the error bound
+    x = jnp.asarray(rng.uniform(-3.4, 3.4, size=(8, 32)), jnp.float32)
+    qcfg = Q.QConfig()
+    w_q, w_scale = Q.quantize_weight(p["w"], qcfg)
+    q = Q.QuantizedLinear(w_q=w_q, w_scale=w_scale, b=p["b"],
+                          x_scale=Q.symmetric_scale(-3.5, 3.5),
+                          act_mode="static")
+    got = Q.quantized_linear(q, x, activation="none", mode="reference")
+    want = ref.node_mlp_ref(x, p["w"], p["b"], "none")
+    assert float(jnp.abs(got - want).max()) < 0.1
+
+
+def test_quantized_linear_dynamic_beats_static_on_mixed_row_scales():
+    # rows with wildly different magnitudes (degree-skewed aggregates):
+    # per-row dynamic scales keep small rows accurate
+    p = {"w": jnp.asarray(RNG.normal(size=(32, 16)) * 0.2, jnp.float32),
+         "b": jnp.zeros((16,), jnp.float32)}
+    rowscale = np.where(np.arange(16) % 4 == 0, 30.0, 0.3)[:, None]
+    x = jnp.asarray(RNG.normal(size=(16, 32)) * rowscale, jnp.float32)
+    w_q, w_scale = Q.quantize_weight(p["w"], Q.QConfig())
+    q_dyn = Q.QuantizedLinear(w_q=w_q, w_scale=w_scale, b=p["b"],
+                              x_scale=jnp.float32(1.0), act_mode="dynamic")
+    q_sta = Q.QuantizedLinear(w_q=w_q, w_scale=w_scale, b=p["b"],
+                              x_scale=Q.symmetric_scale(float(x.min()),
+                                                        float(x.max())),
+                              act_mode="static")
+    want = ref.node_mlp_ref(x, p["w"], p["b"], "none")
+    err_dyn = float(jnp.abs(
+        Q.quantized_linear(q_dyn, x, "none", mode="reference") - want
+    )[np.arange(16) % 4 != 0].mean())
+    err_sta = float(jnp.abs(
+        Q.quantized_linear(q_sta, x, "none", mode="reference") - want
+    )[np.arange(16) % 4 != 0].mean())
+    assert err_dyn < 0.2 * err_sta
+
+
+def test_quantized_linear_is_a_pytree_node():
+    q = Q.QuantizedLinear(
+        w_q=jnp.zeros((4, 4), jnp.int8), w_scale=jnp.ones((4,)),
+        b=jnp.zeros((4,)), x_scale=jnp.float32(0.1),
+        scheme="int8", word_bits=16, int_bits=6,
+    )
+    leaves, treedef = jax.tree_util.tree_flatten(q)
+    assert len(leaves) == 6
+    q2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert q2.scheme == "int8" and q2.word_bits == 16
+
+
+# ------------------------------------------------------- param transform
+
+
+def _calib_graphs(n=3, feat=9, edge=3, seed=5):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        nn = int(rng.integers(6, 14))
+        e = int(rng.integers(nn, 2 * nn))
+        out.append((rng.integers(0, nn, e).astype(np.int32),
+                    rng.integers(0, nn, e).astype(np.int32),
+                    rng.normal(size=(nn, feat)).astype(np.float32),
+                    rng.normal(size=(e, edge)).astype(np.float32)))
+    return out
+
+
+@pytest.mark.parametrize("act_mode", ["dynamic", "static"])
+def test_quantize_model_structure_and_report(act_mode):
+    from repro.gnn import init
+    from repro.gnn.models import paper_config
+    from repro.quant.apply import quantize_model
+
+    cfg = paper_config("gin")
+    params = init(jax.random.PRNGKey(0), cfg)
+    qp, rep = quantize_model(params, cfg, _calib_graphs(),
+                             Q.QConfig(act_mode=act_mode))
+    assert isinstance(qp["encoder"], Q.QuantizedLinear)
+    assert qp["encoder"].act_mode == act_mode
+    assert isinstance(qp["layers"][0]["mlp"][0], Q.QuantizedLinear)
+    # the head stays fp32 (skip list) and nothing was left uncalibrated
+    assert isinstance(qp["head"][0], dict)
+    assert rep.uncalibrated_paths == ()
+    assert rep.quantized == 16 and rep.kept_fp32 == 1  # enc + 5*(edge+2mlp)
+    assert rep.skipped_paths == ("head/0",)
+    # original params untouched
+    assert isinstance(params["encoder"], dict)
+
+
+def test_quantized_forward_close_to_fp32_all_models():
+    from repro.core import graph as G
+    from repro.gnn import init
+    from repro.gnn.models import apply, paper_config
+    from repro.quant.apply import quantize_model
+
+    graphs = _calib_graphs(n=3)
+    s, r, nf, ef = graphs[0]
+    gp = G.from_numpy(s, r, nf, ef)
+    for name in ("gcn", "gat"):  # fast small-logit models; rest in bench
+        cfg = paper_config(name)
+        params = init(jax.random.PRNGKey(0), cfg)
+        qp, _ = quantize_model(params, cfg, graphs)
+        want = np.asarray(apply(params, gp, cfg, num_graphs=1))
+        got = np.asarray(apply(qp, gp, cfg, num_graphs=1))
+        assert np.isfinite(got).all()
+        assert float(np.abs(got - want).max()) < 0.05, name
+
+
+def test_fixed_scheme_needs_no_calibration_and_tracks_fp32():
+    from repro.core import graph as G
+    from repro.gnn import init
+    from repro.gnn.models import apply, paper_config
+    from repro.quant.apply import quantize_params
+
+    cfg = paper_config("gcn")
+    params = init(jax.random.PRNGKey(0), cfg)
+    qp, rep = quantize_params(params, None, Q.QConfig(scheme="fixed"))
+    assert rep.quantized > 0 and rep.uncalibrated_paths == ()
+    s, r, nf, ef = _calib_graphs(n=1)[0]
+    gp = G.from_numpy(s, r, nf, ef)
+    want = np.asarray(apply(params, gp, cfg, num_graphs=1))
+    got = np.asarray(apply(qp, gp, cfg, num_graphs=1))
+    # ap_fixed<16,6>: lsb 2^-10 — emulation tracks fp32 tightly
+    assert float(np.abs(got - want).max()) < 1e-2
+
+
+# ------------------------------------------------------- engine plumbing
+
+
+def test_engine_static_int8_requires_calibration_graphs():
+    from repro.gnn import init
+    from repro.gnn.models import paper_config
+    from repro.serve.gnn_engine import GNNEngine
+
+    cfg = paper_config("gcn")
+    params = init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="calib_graphs"):
+        GNNEngine(cfg, params, precision="int8-static")
+    # dynamic int8 needs none
+    eng = GNNEngine(cfg, params, precision="int8")
+    assert eng.quant_report.quantized > 0
+
+
+def test_engine_precision_modes_stream_packed_zero_recompiles():
+    from repro.core.batching import BucketBudget, pack_graphs
+    from repro.gnn import init
+    from repro.gnn.models import paper_config
+    from repro.serve.gnn_engine import GNNEngine
+    from repro.serve.scheduler import StreamScheduler
+
+    cfg = paper_config("gcn")
+    params = init(jax.random.PRNGKey(0), cfg)
+    graphs = _calib_graphs(n=6, seed=8)
+    fp32 = GNNEngine(cfg, params)
+    int8 = GNNEngine(cfg, params, precision="int8")
+    assert int8.precision == "int8" and int8.quant_report.quantized > 0
+
+    # stream mode: quantized engine matches fp32 closely
+    outs_fp, _, _ = fp32.infer_stream(graphs)
+    outs_q, _, _ = int8.infer_stream(graphs)
+    for a, b in zip(outs_fp, outs_q):
+        np.testing.assert_allclose(a, b, atol=0.05)
+
+    # packed mode through the scheduler: warm once, then zero recompiles
+    sched = StreamScheduler(int8, capacity=2, max_wait_s=0.001)
+    rep1 = sched.run(graphs, qps=0.0)
+    warm = int8.compile_seconds
+    rep2 = sched.run(graphs, qps=0.0)
+    assert int8.compile_seconds == warm, "int8 packed stream recompiled"
+    for a, b in zip(rep2.outputs, outs_q):
+        np.testing.assert_allclose(a, b, atol=1e-4)
+
+    # direct packed call agrees too
+    budget = BucketBudget(n_pad=64, e_pad=128, g_pad=4)
+    packed, meta = pack_graphs(graphs[:2], budget)
+    out, _ = int8.infer_packed(packed, budget)
+    np.testing.assert_allclose(out[:1], outs_q[0], atol=1e-4)
+
+
+def test_engine_precision_int8_static_stream_close_to_fp32():
+    from repro.gnn import init
+    from repro.gnn.models import paper_config
+    from repro.serve.gnn_engine import GNNEngine
+
+    cfg = paper_config("gcn")
+    params = init(jax.random.PRNGKey(0), cfg)
+    graphs = _calib_graphs(n=4, seed=8)
+    static = GNNEngine(cfg, params, precision="int8-static",
+                       calib_graphs=_calib_graphs(n=4, seed=9))
+    assert static.quant_report.scheme == "int8"
+    outs_fp, _, _ = GNNEngine(cfg, params).infer_stream(graphs)
+    outs_q, _, _ = static.infer_stream(graphs)
+    for a, b in zip(outs_fp, outs_q):
+        np.testing.assert_allclose(a, b, atol=0.1)
+
+
+def test_engine_precision_fixed_no_calibration():
+    from repro.gnn import init
+    from repro.gnn.models import paper_config
+    from repro.serve.gnn_engine import GNNEngine
+
+    cfg = paper_config("gcn")
+    params = init(jax.random.PRNGKey(0), cfg)
+    eng = GNNEngine(cfg, params, precision="fixed")
+    fp32 = GNNEngine(cfg, params)
+    graphs = _calib_graphs(n=3, seed=12)
+    outs_fx, _, _ = eng.infer_stream(graphs)
+    outs_fp, _, _ = fp32.infer_stream(graphs)
+    for a, b in zip(outs_fx, outs_fp):
+        np.testing.assert_allclose(a, b, atol=1e-2)
