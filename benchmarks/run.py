@@ -10,6 +10,7 @@ trajectory is tracked across PRs.  Sections:
   fig9   NE/MP pipelining speed-ups (sweep + MolHIV + virtual node)
   table4 per-model resource footprint (params/FLOPs/bytes/VMEM tiles)
   quant  fp32 vs int8/ap_fixed: logit error + packed throughput
+  layout shared GraphLayout plan: sort counts + stream latency + recompiles
   roofline  per-(arch x shape x mesh) dry-run roofline terms
 """
 import sys
@@ -17,12 +18,14 @@ import sys
 
 def main() -> None:
     sections = sys.argv[1:] or [
-        "fig9", "table4", "fig8", "fig7", "stream", "quant", "roofline"
+        "fig9", "table4", "fig8", "fig7", "stream", "quant", "layout",
+        "roofline"
     ]
     from benchmarks import (
         bench_fig7_latency,
         bench_fig8_large_graph,
         bench_fig9_pipeline,
+        bench_layout,
         bench_quant,
         bench_roofline,
         bench_stream_throughput,
@@ -37,6 +40,7 @@ def main() -> None:
         "table4": bench_table4_resources,
         "stream": bench_stream_throughput,
         "quant": bench_quant,
+        "layout": bench_layout,
         "roofline": bench_roofline,
     }
     for s in sections:

@@ -23,8 +23,15 @@ from repro.core.batching import (
     BucketBudget,
     PackMeta,
     pack_graphs,
+    pack_layout,
     pack_eigvecs,
     unpack_outputs,
+)
+from repro.core.layout import (
+    GraphLayout,
+    build_layout,
+    host_layout,
+    ensure_layout,
 )
 from repro.core.scatter_gather import (
     segment_reduce,
@@ -46,8 +53,13 @@ __all__ = [
     "BucketBudget",
     "PackMeta",
     "pack_graphs",
+    "pack_layout",
     "pack_eigvecs",
     "unpack_outputs",
+    "GraphLayout",
+    "build_layout",
+    "host_layout",
+    "ensure_layout",
     "mp_layer",
     "gather_scatter",
     "global_pool",

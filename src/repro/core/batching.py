@@ -25,6 +25,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import graph as G
+from repro.core import layout as LY
 
 # a raw host graph: (senders, receivers, node_feat[, edge_feat])
 RawGraph = tuple
@@ -101,6 +102,19 @@ def pack_graphs(graphs: Sequence[RawGraph], budget: BucketBudget) -> Tuple[G.Gra
         edge_counts=tuple(e for _, e in sizes),
     )
     return packed, meta
+
+
+def pack_layout(packed: G.Graph) -> LY.GraphLayout:
+    """Emit the packed batch's ``GraphLayout`` plan at pack time.
+
+    Host-side ``np.argsort(kind="stable")`` over the same masked keys the
+    device path uses, so the plan is bit-identical to one built on device
+    — but the compiled forward program that receives it contains **zero**
+    sort ops (the paper's convert-once-at-ingest, §3.4).  The scheduler
+    calls this right after :func:`pack_graphs` and hands the plan through
+    ``GNNEngine.infer_packed`` alongside the batch.
+    """
+    return LY.host_layout(packed)
 
 
 def pack_eigvecs(eigvecs: Sequence[np.ndarray], meta: PackMeta) -> np.ndarray:

@@ -9,17 +9,38 @@ per destination, transform per node) and models plug in:
   * ``aggregate``one or more permutation-invariant reductions,
   * ``gamma``    node transformation (the "Node Embedding PE").
 
-GenGNN's merged scatter-gather is realized by ``sorted_segment_reduce``:
-messages fold into the O(N) destination buffer immediately, in sorted-edge
-order — permutation invariance makes the order irrelevant (§3.4).
+GenGNN's merged scatter-gather is realized over a shared
+``core.layout.GraphLayout``: the COO->CSC conversion (the one O(E log E)
+sort) happens once per graph, and every aggregation of every layer folds
+its messages into the O(N) destination buffer through that single plan —
+permutation invariance makes the order irrelevant (§3.4).
+
+Masking contract
+----------------
+Padding-edge masking is the **layout's job**, not the caller's and not a
+value-side multiply here:
+
+  * the plan's sort keys are ``where(edge_mask, dst, N_pad)``, so padding
+    edges sort to the end carrying the out-of-range id ``N_pad``;
+  * JAX segment ops *drop* out-of-range ids, so padding messages never
+    reach a real destination row — whatever garbage they hold;
+  * callers therefore pass raw, unmasked per-edge messages, and nothing
+    in this module multiplies messages by ``edge_mask`` (the seed did
+    both, meaning every aggregate paid a redundant (E, F) select *and*
+    several callers pre-masked on top of that).
+
+Node-side masking stays explicit (``mp_layer`` zeroes padded node rows on
+the way out) because padded node rows are *read back* by the next layer's
+gather, unlike padding edges which are write-only.
 """
 from __future__ import annotations
 
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import layout as LY
 from repro.core import scatter_gather as sg
 from repro.core.graph import Graph, in_degree
 
@@ -27,6 +48,8 @@ from repro.core.graph import Graph, in_degree
 PhiFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
 # gamma(x, aggregated) -> new x    (node-parallel)
 GammaFn = Callable[[jax.Array, jax.Array], jax.Array]
+# aggregate(graph, messages, layout) -> per-node aggregate (the A of §3.3)
+AggregateFn = Callable[[Graph, jax.Array, Optional["LY.GraphLayout"]], jax.Array]
 
 AGGREGATORS = ("sum", "mean", "max", "min", "std", "var")
 
@@ -35,23 +58,34 @@ def gather_scatter(
     graph: Graph,
     messages: jax.Array,
     ops: Sequence[str] = ("sum",),
+    layout: Optional[LY.GraphLayout] = None,
     use_sorted: bool = True,
 ) -> jax.Array:
     """Reduce edge messages into per-destination aggregates.
 
-    messages: (E_pad, F) — already masked for padding edges by the caller
-    (or rely on padding edges pointing at the sink node).
-    Returns (N_pad, len(ops) * F) with aggregates concatenated feature-wise
-    (PNA-style multi-aggregator layout).
+    messages: (E_pad, F) raw per-edge values in COO order — **unmasked**;
+    padding-edge rows are dropped by the plan's out-of-range ids (see the
+    module-level masking contract).  Returns (N_pad, len(ops) * F) with
+    aggregates concatenated feature-wise (PNA-style layout).
+
+    With ``layout`` the messages are permuted once and every op reduces
+    the shared sorted stream (zero sorts).  Without one, each op runs the
+    seed per-call sort path — kept for parity tests and A/B benchmarks.
     """
-    msg = jnp.where(graph.edge_mask[:, None], messages, 0.0)
+    if layout is not None:
+        msg_sorted = jnp.take(messages, layout.perm, axis=0)
+        outs = [
+            LY.segment_reduce(layout, msg_sorted, op, presorted=True)
+            for op in ops
+        ]
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
     dst = jnp.where(graph.edge_mask, graph.dst, graph.num_nodes)
     outs = []
     for op in ops:
         if use_sorted:
-            outs.append(sg.sorted_segment_reduce(msg, dst, graph.num_nodes, op))
+            outs.append(sg.sorted_segment_reduce(messages, dst, graph.num_nodes, op))
         else:
-            outs.append(sg.segment_reduce(msg, dst, graph.num_nodes, op))
+            outs.append(sg.segment_reduce(messages, dst, graph.num_nodes, op))
     return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
 
 
@@ -62,16 +96,25 @@ def mp_layer(
     gamma: GammaFn,
     ops: Sequence[str] = ("sum",),
     edge_feat: jax.Array | None = None,
+    layout: Optional[LY.GraphLayout] = None,
+    aggregate: Optional[AggregateFn] = None,
 ) -> jax.Array:
     """One full message-passing layer: scatter(phi) -> A -> gamma.
 
     ``x``: (N_pad, F) current node embeddings.  Returns (N_pad, F').
+    ``aggregate`` overrides the default multi-op ``gather_scatter`` when a
+    model's A(.) is richer than a concatenation of standard reductions
+    (PNA's scaled tower, DGN's directional derivative); it receives the
+    shared ``layout`` so custom aggregators also sort zero times.
     """
     e = graph.edge_feat if edge_feat is None else edge_feat
     x_src = jnp.take(x, graph.src, axis=0)
     x_dst = jnp.take(x, graph.dst, axis=0)
     messages = phi(x_src, x_dst, e)
-    agg = gather_scatter(graph, messages, ops=ops)
+    if aggregate is not None:
+        agg = aggregate(graph, messages, layout)
+    else:
+        agg = gather_scatter(graph, messages, ops=ops, layout=layout)
     out = gamma(x, agg)
     return jnp.where(graph.node_mask[:, None], out, 0.0)
 
@@ -81,13 +124,21 @@ def mp_layer(
 # ---------------------------------------------------------------------------
 
 
-def pna_scalers(graph: Graph, avg_degree: float) -> jax.Array:
+def pna_scalers(
+    graph: Optional[Graph],
+    avg_degree: float,
+    degree: Optional[jax.Array] = None,
+) -> jax.Array:
     """(N_pad, 3) scaler matrix [1, amplification, attenuation] of [21].
 
     ``avg_degree`` is the mean degree seen in training data (a model
-    hyperparameter, not graph preprocessing).
+    hyperparameter, not graph preprocessing).  ``degree`` takes the
+    layout's cached in-degree; without it the count is recomputed from
+    ``graph`` (identical integer sums either way).
     """
-    deg = in_degree(graph).astype(jnp.float32)
+    if degree is None:
+        degree = in_degree(graph)
+    deg = degree.astype(jnp.float32)
     logd = jnp.log(deg + 1.0)
     log_davg = jnp.log(jnp.asarray(avg_degree) + 1.0)
     amp = logd / log_davg
@@ -96,11 +147,27 @@ def pna_scalers(graph: Graph, avg_degree: float) -> jax.Array:
     return jnp.stack([jnp.ones_like(logd), amp, att], axis=-1)
 
 
-def pna_aggregate(graph: Graph, messages: jax.Array, avg_degree: float) -> jax.Array:
-    """Full PNA tower: 4 aggregators x 3 scalers -> (N_pad, 12*F)."""
-    agg = gather_scatter(graph, messages, ops=("mean", "std", "max", "min"))
+def pna_aggregate(
+    graph: Graph,
+    messages: jax.Array,
+    avg_degree: float,
+    layout: Optional[LY.GraphLayout] = None,
+) -> jax.Array:
+    """Full PNA tower: 4 aggregators x 3 scalers -> (N_pad, 12*F).
+
+    With a shared layout the four reductions consume one permuted message
+    stream and the scalers come off the cached degree — zero sorts; the
+    seed path re-sorted the same edges four times per layer.
+    """
+    agg = gather_scatter(
+        graph, messages, ops=("mean", "std", "max", "min"), layout=layout
+    )
     n, f4 = agg.shape
-    scalers = pna_scalers(graph, avg_degree)  # (N, 3)
+    if layout is not None and layout.pna_scalers is not None:
+        scalers = layout.pna_scalers
+    else:
+        degree = layout.in_degree if layout is not None else None
+        scalers = pna_scalers(graph, avg_degree, degree=degree)
     out = agg[:, None, :] * scalers[:, :, None]  # (N, 3, 4F)
     return out.reshape(n, 3 * f4)
 
@@ -124,6 +191,8 @@ def global_pool(
     ``num_nodes`` upper bound — every graph has at least one node — which
     keeps single-graph call sites working but makes the pooled buffer
     mostly padding; batch/packed callers should always pass the real count.
+    (``graph_id`` is node-indexed and already ordered, so pooling never
+    needs the edge plan — no sort here in any path.)
     """
     m = graph.num_nodes if num_graphs is None else num_graphs
     gid = jnp.where(graph.node_mask, graph.graph_id, m)

@@ -15,7 +15,6 @@ the GNN engine, MoE token routing, and distributed large-graph exchange.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import jax
@@ -144,19 +143,22 @@ def combine_from_slots(
     return jnp.where(kept[:, None], out, 0.0)
 
 
-@partial(jax.jit, static_argnames=("num_segments", "op"))
 def sorted_segment_reduce(
     values: jax.Array,
     segment_ids: jax.Array,
     num_segments: int,
     op: str = "sum",
 ) -> jax.Array:
-    """segment_reduce after an explicit on-device sort (CSR/CSC layout).
+    """segment_reduce after a *private* on-device sort (CSR/CSC layout).
 
-    Functionally identical to :func:`segment_reduce`; exists so the engine
-    can share one sort across many layers (the paper converts COO once and
-    reuses it for all layers) and so the Pallas kernel — which requires
-    sorted segments for block locality — drops in transparently.
+    Functionally identical to :func:`segment_reduce`.  The shared-plan
+    path (``core.layout.GraphLayout``) amortizes this sort across every
+    aggregation of a forward pass; this per-call form remains as the
+    layout-less fallback and the seed-parity reference, and is what
+    ``core.layout.segment_reduce`` reduces to when handed a fresh sort.
+    (The nested ``@jax.jit`` this wrapper used to carry is gone: callers
+    are always inside a jitted program already, and the extra jit level
+    only added trace overhead and hid the sort from jaxpr inspection.)
     """
     perm, ids_sorted, _ = sort_by_segment(segment_ids, num_segments)
     vals_sorted = jnp.take(values, perm, axis=0)

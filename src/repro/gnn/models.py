@@ -19,8 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import graph as G
+from repro.core import layout as LY
 from repro.core import message_passing as mp
-from repro.core import scatter_gather as sg
 from repro.gnn import layers as L
 
 
@@ -108,36 +108,54 @@ def init(rng: jax.Array, cfg: GNNConfig) -> dict:
 
 
 # ---------------------------------------------------------------------------
-# per-model layer bodies: each returns new node embeddings
+# per-model layer bodies: each is a (phi, A, gamma) triple over the generic
+# ``mp.mp_layer`` dataflow, closed over the shared ``GraphLayout`` plan —
+# layer bodies never sort; graph-static values come off ``extras["layout"]``
 # ---------------------------------------------------------------------------
 
 
 def _gcn_layer(g: G.Graph, x, lp, cfg, extras):
     # x' = W^T sum_{j in N(i) U {i}} x_j / sqrt((d_i+1)(d_j+1)) + b
-    deg = G.in_degree(g).astype(jnp.float32) + 1.0
-    inv_sqrt = jax.lax.rsqrt(deg)
+    layout = extras["layout"]
+    if layout is not None and layout.gcn_inv_sqrt is not None:
+        inv_sqrt = layout.gcn_inv_sqrt
+    else:
+        inv_sqrt = jax.lax.rsqrt(G.in_degree(g).astype(jnp.float32) + 1.0)
     xw = L.linear_apply(lp["lin"], x, mode=cfg.kernel_mode)
     xs = xw * inv_sqrt[:, None]
 
     def phi(x_src, x_dst, e):
         return x_src
 
-    agg = mp.gather_scatter(g, jnp.take(xs, g.src, axis=0), ops=("sum",))
-    out = (agg + xs) * inv_sqrt[:, None]  # self loop folded in
-    return jnp.where(g.node_mask[:, None], out, 0.0)
+    def gamma(xs_, agg):
+        return (agg + xs_) * inv_sqrt[:, None]  # self loop folded in
+
+    return mp.mp_layer(g, xs, phi, gamma, ops=("sum",), layout=layout)
 
 
 def _gin_layer(g: G.Graph, x, lp, cfg, extras):
     # phi(x, e) = relu(x_src + edge_embed)   (paper: x + eps*m with edge emb)
     e_emb = L.linear_apply(lp["edge"], g.edge_feat, mode=cfg.kernel_mode)
-    x_src = jnp.take(x, g.src, axis=0)
-    messages = jax.nn.relu(x_src + e_emb)
-    agg = mp.gather_scatter(g, messages, ops=("sum",))
-    out = L.mlp_apply(lp["mlp"], (1.0 + lp["eps"]) * x + agg, mode=cfg.kernel_mode)
-    return jnp.where(g.node_mask[:, None], out, 0.0)
+
+    def phi(x_src, x_dst, e):
+        return jax.nn.relu(x_src + e)
+
+    def gamma(x_, agg):
+        return L.mlp_apply(
+            lp["mlp"], (1.0 + lp["eps"]) * x_ + agg, mode=cfg.kernel_mode
+        )
+
+    return mp.mp_layer(
+        g, x, phi, gamma, ops=("sum",), edge_feat=e_emb,
+        layout=extras["layout"],
+    )
 
 
 def _gat_layer(g: G.Graph, x, lp, cfg, extras):
+    """GAT's A(.) is an edge softmax, not a plain reduction, so its triple
+    is spelled out over the same shared plan: phi produces per-edge logits
+    and messages, A normalizes per destination (both segment kernels ride
+    the plan's permutation), gamma is the elu tail."""
     h, f = cfg.heads, cfg.head_features
     n = g.num_nodes
     xp = L.linear_apply(lp["proj"], x, mode=cfg.kernel_mode).reshape(n, h, f)
@@ -145,16 +163,16 @@ def _gat_layer(g: G.Graph, x, lp, cfg, extras):
     a_dst = jnp.einsum("nhf,hf->nh", xp, lp["att_dst"])
     logits = jax.nn.leaky_relu(
         jnp.take(a_src, g.src, axis=0) + jnp.take(a_dst, g.dst, axis=0), 0.2
-    )  # (E, H)
-    # sort edges by destination (CSC) once for the softmax + aggregate
-    dst = jnp.where(g.edge_mask, g.dst, n)
-    perm, ids_sorted, _ = sg.sort_by_segment(dst, n)
+    )  # (E, H) in COO order
+    # destination-ordered (CSC) plan: shared across layers, or a private
+    # per-call sort when no layout is threaded (seed-parity path)
+    perm, ids_sorted, src_sorted = LY.edge_plan(extras["layout"], g)
     from repro.kernels import ops as kops
 
     alpha = kops.edge_softmax(
-        jnp.take(logits, perm, axis=0), ids_sorted, n, mode=cfg.kernel_mode
+        logits, ids_sorted, n, mode=cfg.kernel_mode, perm=perm
     )  # (E, H) sorted
-    msg = jnp.take(xp, jnp.take(g.src, perm), axis=0) * alpha[:, :, None]
+    msg = jnp.take(xp, src_sorted, axis=0) * alpha[:, :, None]
     agg = kops.segment_reduce(
         msg.reshape(-1, h * f), ids_sorted, n, op="sum", mode=cfg.kernel_mode
     )
@@ -164,11 +182,22 @@ def _gat_layer(g: G.Graph, x, lp, cfg, extras):
 
 def _pna_layer(g: G.Graph, x, lp, cfg, extras):
     xp = L.linear_apply(lp["pre"], x, activation="relu", mode=cfg.kernel_mode)
-    messages = jnp.take(xp, g.src, axis=0)
-    tower = mp.pna_aggregate(g, messages, cfg.avg_degree)  # (N, 12w)
-    out = L.linear_apply(lp["post"], tower, activation="relu", mode=cfg.kernel_mode)
-    out = out + x  # skip connection (§4.3)
-    return jnp.where(g.node_mask[:, None], out, 0.0)
+
+    def phi(x_src, x_dst, e):
+        return x_src
+
+    def aggregate(graph, messages, layout):
+        return mp.pna_aggregate(graph, messages, cfg.avg_degree, layout=layout)
+
+    def gamma(xp_, tower):
+        out = L.linear_apply(
+            lp["post"], tower, activation="relu", mode=cfg.kernel_mode
+        )
+        return out + x  # skip connection (§4.3) from the layer input
+
+    return mp.mp_layer(
+        g, xp, phi, gamma, aggregate=aggregate, layout=extras["layout"]
+    )
 
 
 def _dgn_layer(g: G.Graph, x, lp, cfg, extras):
@@ -176,21 +205,44 @@ def _dgn_layer(g: G.Graph, x, lp, cfg, extras):
 
     B_dx row i: w_ij = (phi_j - phi_i) / sum_k |phi_k - phi_i|;
     y_dx_i = | sum_j w_ij x_j  -  x_i sum_j w_ij |.
+
+    The directional weights depend only on the graph and its eigenvector,
+    so they live on the layout (computed once per forward, not per layer);
+    the per-layer work is phi = x_src, A = [mean, w-weighted sum], and
+    gamma assembles the |.| derivative and the post-MLP + skip.
     """
-    phi1 = extras["eigvec"]  # (N,) first non-trivial Laplacian eigenvector
-    dphi = jnp.take(phi1, g.src) - jnp.take(phi1, g.dst)  # (E,)
-    dphi = jnp.where(g.edge_mask, dphi, 0.0)
-    denom = mp.gather_scatter(g, jnp.abs(dphi)[:, None], ops=("sum",))[:, 0]  # (N,)
-    w_e = dphi / jnp.maximum(jnp.take(denom, g.dst), 1e-6)
-    x_src = jnp.take(x, g.src, axis=0)
-    mean_agg = mp.gather_scatter(g, x_src, ops=("mean",))
-    wx = mp.gather_scatter(g, x_src * w_e[:, None], ops=("sum",))
-    wsum = mp.gather_scatter(g, w_e[:, None], ops=("sum",))[:, 0]
-    dx_agg = jnp.abs(wx - x * wsum[:, None])
-    tower = jnp.concatenate([x, mean_agg, dx_agg], axis=-1)
-    out = L.linear_apply(lp["post"], tower, activation="relu", mode=cfg.kernel_mode)
-    out = out + x  # skip connection, as in PNA (§4.4)
-    return jnp.where(g.node_mask[:, None], out, 0.0)
+    layout = extras["layout"]
+    if layout is not None and layout.dgn_w_e is not None:
+        w_e, wsum = layout.dgn_w_e, layout.dgn_wsum
+    else:
+        phi1 = extras["eigvec"]  # (N,) first non-trivial Laplacian eigvec
+        dphi = jnp.take(phi1, g.src) - jnp.take(phi1, g.dst)  # (E,)
+        dphi = jnp.where(g.edge_mask, dphi, 0.0)
+        denom = mp.gather_scatter(g, jnp.abs(dphi)[:, None], ops=("sum",))[:, 0]
+        w_e = dphi / jnp.maximum(jnp.take(denom, g.dst), 1e-6)
+        wsum = mp.gather_scatter(g, w_e[:, None], ops=("sum",))[:, 0]
+
+    def phi(x_src, x_dst, e):
+        return x_src
+
+    def aggregate(graph, x_src, layout_):
+        mean_agg = mp.gather_scatter(graph, x_src, ops=("mean",), layout=layout_)
+        wx = mp.gather_scatter(
+            graph, x_src * w_e[:, None], ops=("sum",), layout=layout_
+        )
+        return jnp.concatenate([mean_agg, wx], axis=-1)
+
+    def gamma(x_, agg):
+        d = x_.shape[-1]
+        mean_agg, wx = agg[:, :d], agg[:, d:]
+        dx_agg = jnp.abs(wx - x_ * wsum[:, None])
+        tower = jnp.concatenate([x_, mean_agg, dx_agg], axis=-1)
+        out = L.linear_apply(
+            lp["post"], tower, activation="relu", mode=cfg.kernel_mode
+        )
+        return out + x_  # skip connection, as in PNA (§4.4)
+
+    return mp.mp_layer(g, x, phi, gamma, aggregate=aggregate, layout=layout)
 
 
 _LAYERS = {"gcn": _gcn_layer, "gin": _gin_layer, "gat": _gat_layer,
@@ -208,6 +260,8 @@ def apply(
     cfg: GNNConfig,
     eigvec: Optional[jax.Array] = None,
     num_graphs: Optional[int] = None,
+    layout: Optional[LY.GraphLayout] = None,
+    share_layout: bool = True,
 ) -> jax.Array:
     """Forward pass.  Returns (num_graphs, out_dim) for graph tasks or
     (N_pad, out_dim) for node tasks.  ``eigvec`` is DGN's precomputed
@@ -217,10 +271,23 @@ def apply(
     or the serving batch size); it sizes the pooled / virtual-node buffers.
     When omitted it falls back to the ``num_nodes`` upper bound, which is
     correct but allocates one pooled row per padded node.
+
+    ``layout`` is the shared destination-ordered edge plan (§3.4): pass
+    one built at pack/ingest time for a zero-sort forward, or leave it
+    ``None`` to build it here (exactly one on-device sort, amortized over
+    every layer).  ``share_layout=False`` disables the plan entirely and
+    reverts to the seed per-call-sort path — kept for the bitwise parity
+    tests and the A/B sort-count benchmark, never for serving.
     """
     m = g.num_nodes if num_graphs is None else num_graphs
     layer_fn = _LAYERS[cfg.model]
-    extras = {"eigvec": eigvec}
+    if share_layout:
+        layout = LY.for_model(
+            layout, g, cfg.model, avg_degree=cfg.avg_degree, eigvec=eigvec
+        )
+    else:
+        layout = None
+    extras = {"eigvec": eigvec, "layout": layout}
     x = L.linear_apply(params["encoder"], g.node_feat, mode=cfg.kernel_mode)
     x = jnp.where(g.node_mask[:, None], x, 0.0)
     vn = None  # (m, w) per-graph virtual-node state

@@ -62,8 +62,18 @@ def segment_reduce(
     num_segments: int,
     op: str = "sum",
     mode: str = "auto",
+    perm: jax.Array | None = None,
 ) -> jax.Array:
-    """Sorted-segment reduction (MP PE). values (E,F), ids sorted."""
+    """Sorted-segment reduction (MP PE). values (E,F), ids sorted.
+
+    Operands are **pre-sorted**: ``segment_ids`` non-decreasing, coming
+    from a shared ``core.layout.GraphLayout`` plan — neither the Pallas
+    kernel nor the jnp reference ever sorts.  Pass ``perm`` (the plan's
+    CSC permutation) when ``values`` are still in COO order; the gather
+    happens here so call sites stay sort-free and plan-agnostic.
+    """
+    if perm is not None:
+        values = jnp.take(values, perm, axis=0)
     use_kernel, interpret = _resolve(mode)
     if not use_kernel:
         return ref.segment_reduce_sorted_ref(values, segment_ids, num_segments, op)
@@ -121,8 +131,16 @@ def edge_softmax(
     segment_ids: jax.Array,
     num_segments: int,
     mode: str = "auto",
+    perm: jax.Array | None = None,
 ) -> jax.Array:
-    """Per-destination softmax over sorted edges (GAT)."""
+    """Per-destination softmax over sorted edges (GAT).
+
+    ``segment_ids`` are pre-sorted (a shared layout plan); ``perm``
+    gathers COO-order ``logits`` into plan order first — the sort itself
+    never happens here, on either the Pallas or the reference path.
+    """
+    if perm is not None:
+        logits = jnp.take(logits, perm, axis=0)
     use_kernel, interpret = _resolve(mode)
     if not use_kernel:
         return ref.edge_softmax_ref(logits, segment_ids, num_segments)

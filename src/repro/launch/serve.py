@@ -57,7 +57,8 @@ def serve_gnn(args):
         # calibration stream disjoint from the served one (seed split)
         calib = [g[:4] for g in MoleculeStream(MOLHIV, seed=97).take(16)]
     eng = GNNEngine(cfg, params, mesh=mesh, precision=args.precision,
-                    calib_graphs=calib)
+                    calib_graphs=calib,
+                    share_layout=not args.no_share_layout)
     if eng.quant_report is not None:
         r = eng.quant_report
         print(f"[quant] {args.precision}: {r.quantized} linears quantized, "
@@ -126,6 +127,10 @@ def main():
                     help="stream: packed budget = this many base buckets")
     ap.add_argument("--gnn-mesh", type=int, default=1,
                     help="GNN: shard node/edge rows over this many devices")
+    ap.add_argument("--no-share-layout", action="store_true",
+                    help="GNN: disable the shared GraphLayout plan and "
+                         "re-sort edges inside every aggregation (the "
+                         "pre-layout behaviour; A/B benchmarking only)")
     ap.add_argument("--precision",
                     choices=("fp32", "int8", "int8-static", "fixed"),
                     default="fp32",

@@ -25,6 +25,17 @@ Each (bucket, mode) pair owns a ``_CompiledBucket`` record: the jitted
 program plus warm-signature bookkeeping, so compilation time never leaks
 into a timed region — a fresh signature appearing mid-stream (first chunk
 of a new shape, eigvec toggling) is warmed untimed first.
+
+Every mode shares one ``core.layout.GraphLayout`` plan per forward (the
+paper's convert-COO-once, §3.4): stream/batched programs build the plan
+on device inside the compiled step (exactly one sort, timed honestly as
+part of the forward), while ``infer_packed`` accepts the plan the packer
+emitted at pack time (``core.batching.pack_layout``) so the packed
+program runs with zero on-device sorts.  The plan rides the same bucket
+signature as the graph — same padded shapes, same compiled program — so
+layout threading adds no compile-cache keys and no recompiles.
+``share_layout=False`` reverts every mode to the seed per-call-sort path
+(parity tests / A-B benchmarks only).
 """
 from __future__ import annotations
 
@@ -38,7 +49,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import runtime as RT
+from repro.core import batching as B
 from repro.core import graph as G
+from repro.core import layout as LY
 from repro.gnn import models as M
 
 DEFAULT_BUCKETS: Sequence[tuple] = ((32, 96), (64, 192), (128, 384), (256, 768))
@@ -64,6 +77,7 @@ class GNNEngine:
         precision: str = "fp32",
         calib_graphs: Optional[Sequence[tuple]] = None,
         qconfig=None,
+        share_layout: bool = True,
     ):
         """``precision`` selects the serving arithmetic: "fp32" (default),
         "int8" (W8A8 with dynamic per-node activation scales; no
@@ -72,9 +86,14 @@ class GNNEngine:
         tuples), or "fixed" (the paper's ap_fixed<W,I> emulation).
         Quantization happens once here — every mode (stream / batched /
         packed, with or without a mesh) then serves the transformed params
-        through the identical bucket/compile machinery."""
+        through the identical bucket/compile machinery.
+
+        ``share_layout`` (default on) threads one ``GraphLayout`` plan per
+        forward through every model layer; off = the seed per-call-sort
+        path, retained only for parity tests and A/B benchmarks."""
         self.cfg = cfg
         self.precision = precision
+        self.share_layout = share_layout
         self.quant_report = None
         if precision != "fp32":
             from repro.quant import apply as QA
@@ -128,6 +147,18 @@ class GNNEngine:
             graph_id=lc(g.graph_id, ("nodes",)),
         )
 
+    def _constrain_layout(self, layout: LY.GraphLayout) -> LY.GraphLayout:
+        """Shard the plan's edge-order arrays like the edge rows they
+        index (offsets is (N+1,) and stays replicated)."""
+        lc = RT.logical_constraint
+        return dataclasses.replace(
+            layout,
+            perm=lc(layout.perm, ("edges",)),
+            ids_sorted=lc(layout.ids_sorted, ("edges",)),
+            src_sorted=lc(layout.src_sorted, ("edges",)),
+            in_degree=lc(layout.in_degree, ("nodes",)),
+        )
+
     def _bucket_for(self, n: int, e: int) -> tuple:
         for nb, eb in self.buckets:
             if n <= nb and e <= eb:
@@ -139,12 +170,15 @@ class GNNEngine:
         if cb is None:
 
             @jax.jit
-            def run(params, g: G.Graph, eigvec):
+            def run(params, g: G.Graph, eigvec, layout):
                 g = self._constrain_graph(g)
                 if eigvec is not None:
                     eigvec = RT.logical_constraint(eigvec, ("nodes",))
+                if layout is not None:
+                    layout = self._constrain_layout(layout)
                 return M.apply(params, g, self.cfg, eigvec=eigvec,
-                               num_graphs=num_graphs)
+                               num_graphs=num_graphs, layout=layout,
+                               share_layout=self.share_layout)
 
             cb = _CompiledBucket(fn=run)
             self._compiled[key] = cb
@@ -180,9 +214,11 @@ class GNNEngine:
                 g = G.from_numpy(s, r, nf, ef, n_pad=nb, e_pad=eb)
                 eig = self._eigvec(s, r, nf.shape[0], nb) if with_eigvec else None
                 cb = self._bucket(("stream", nb, eb), num_graphs=1)
-                compile_time += self._warm(cb, ("eig", with_eigvec), g, eig)
+                # layout=None: the compiled step converts COO once on
+                # device (the single timed sort of the forward)
+                compile_time += self._warm(cb, ("eig", with_eigvec), g, eig, None)
                 t0 = time.perf_counter()
-                out = jax.block_until_ready(cb.fn(self.params, g, eig))
+                out = jax.block_until_ready(cb.fn(self.params, g, eig, None))
                 lats.append(time.perf_counter() - t0)
                 outs.append(np.asarray(out[:1]))
         return outs, np.asarray(lats), compile_time
@@ -218,15 +254,15 @@ class GNNEngine:
                 sig = ("eig", with_eigvec) + tuple(
                     (tuple(v.shape), str(v.dtype)) for v in jax.tree.leaves(g)
                 )
-                self._warm(cb, sig, g, eig)
+                self._warm(cb, sig, g, eig, None)
                 t0 = time.perf_counter()
-                out = jax.block_until_ready(cb.fn(self.params, g, eig))
+                out = jax.block_until_ready(cb.fn(self.params, g, eig, None))
                 total += time.perf_counter() - t0
                 outs.append(np.asarray(out[: len(chunk)]))
         return np.concatenate(outs), total / len(graphs)
 
     def infer_packed(self, packed: G.Graph, budget, eigvec=None,
-                     warm_only: bool = False):
+                     warm_only: bool = False, layout=None):
         """Run one already-packed multi-graph batch (``core.batching``).
 
         ``budget`` is the ``BucketBudget`` the batch was packed against —
@@ -237,6 +273,14 @@ class GNNEngine:
         graph's).  Returns (outputs (G_pad, out), compute seconds) with
         warm/compile time excluded and tracked in ``compile_seconds``.
 
+        ``layout`` is the batch's ``GraphLayout`` plan, normally emitted
+        by the packer (``core.batching.pack_layout``) so the compiled
+        program contains zero on-device sorts; when absent (and layout
+        sharing is on) the engine builds the host plan here — the plan
+        always travels with its batch, never a sort inside the program.
+        Plan shapes are functions of the budget, so the compile signature
+        per bucket is unchanged.
+
         ``warm_only`` compiles/warms this batch's signature and returns
         (None, 0.0) without a second timed execution — the scheduler uses
         it to pre-warm budget-ladder rungs.
@@ -245,15 +289,17 @@ class GNNEngine:
         cb = self._bucket(key, num_graphs=budget.g_pad)
         if eigvec is not None:
             eigvec = jnp.asarray(eigvec, jnp.float32)
+        if layout is None and self.share_layout:
+            layout = B.pack_layout(packed)
         with self._mesh_scope():
-            sig = ("eig", eigvec is not None) + tuple(
+            sig = ("eig", eigvec is not None, "lay", layout is not None) + tuple(
                 (tuple(v.shape), str(v.dtype)) for v in jax.tree.leaves(packed)
             )
-            self._warm(cb, sig, packed, eigvec)
+            self._warm(cb, sig, packed, eigvec, layout)
             if warm_only:
                 return None, 0.0
             t0 = time.perf_counter()
-            out = jax.block_until_ready(cb.fn(self.params, packed, eigvec))
+            out = jax.block_until_ready(cb.fn(self.params, packed, eigvec, layout))
             dt = time.perf_counter() - t0
         return np.asarray(out), dt
 

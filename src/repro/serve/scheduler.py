@@ -25,6 +25,12 @@ graph runs a program no bigger than the single-graph mode's.  Every rung
 is warmed (compiled untimed) the first time its signature appears, so a
 live stream never recompiles after warmup no matter how load fluctuates.
 
+Every flush also carries its ``GraphLayout`` plan: ``_execute`` emits it
+host-side right after packing (``core.batching.pack_layout``) and hands
+it through ``infer_packed``, so the flushed program performs zero
+on-device sorts — the paper's COO conversion happens once at pack time
+and is reused by every layer of the flushed model (§3.4).
+
 ``StreamScheduler.run`` is an event-driven simulation of a live stream on
 a single serial executor: arrivals are offered at a configurable rate
 (QPS), flushes execute real engine compute (measured wall time), and a
@@ -46,6 +52,7 @@ from repro.core.batching import (
     graph_sizes,
     pack_eigvecs,
     pack_graphs,
+    pack_layout,
     unpack_outputs,
 )
 
@@ -205,7 +212,8 @@ class StreamScheduler:
         for budget in ladder:
             packed, meta = pack_graphs([dummy], budget)
             eig = pack_eigvecs([np.zeros(1, np.float32)], meta) if self.with_eigvec else None
-            self.engine.infer_packed(packed, budget, eigvec=eig, warm_only=True)
+            self.engine.infer_packed(packed, budget, eigvec=eig, warm_only=True,
+                                     layout=self._plan(packed))
 
     # -------------------------------------------------------------- serving
 
@@ -292,6 +300,12 @@ class StreamScheduler:
 
     # ------------------------------------------------------------- internal
 
+    def _plan(self, packed):
+        """The batch's ``GraphLayout``, emitted host-side at pack time
+        (zero on-device sorts in the flush program); None when the engine
+        runs the per-call-sort parity path."""
+        return pack_layout(packed) if self.engine.share_layout else None
+
     def _execute(self, bucket: _OpenBucket) -> Tuple[List[np.ndarray], float]:
         raws = [r.graph for r in bucket.requests]
         rung = bucket.rung()
@@ -303,6 +317,7 @@ class StreamScheduler:
                 for s, r, nf, _ in (g[:4] for g in raws)
             ]
             eig = pack_eigvecs(vecs, meta)
-        out, dt = self.engine.infer_packed(packed, rung, eigvec=eig)
+        out, dt = self.engine.infer_packed(packed, rung, eigvec=eig,
+                                           layout=self._plan(packed))
         level = "graph" if self.engine.cfg.task == "graph" else "node"
         return unpack_outputs(out, meta, level=level), dt

@@ -1,0 +1,260 @@
+"""Shared-GraphLayout parity: one sort per graph must change NOTHING.
+
+The layout plan (core/layout.py) replaces 5-20 per-aggregation edge sorts
+with one shared conversion (paper §3.4).  Because the plan's keys and
+stable sort are exactly what every aggregation ran privately, the refactor
+must be *bitwise* invisible:
+
+  * ``apply`` with the shared plan (built in-forward, prebuilt on device,
+    or host-built at pack time) == the seed per-call-sort path
+    (``share_layout=False``), for all six models, across padding fuzz;
+  * every engine mode (stream / batched / packed) x fp32 / int8 serves
+    bitwise-identical outputs with sharing on and off;
+  * the jaxpr of a shared forward contains at most ONE ``sort`` op
+    (zero when the plan is supplied), while the seed path has many;
+  * the masking contract: padding-edge message values are dropped by the
+    plan's out-of-range ids, so garbage there never reaches real rows.
+
+The deterministic seeded cases always run; with ``hypothesis`` installed
+(requirements-dev.txt) the parity property is additionally fuzzed over
+random graphs and padding amounts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import layout as LY
+from repro.core import message_passing as mp
+from repro.core.batching import BucketBudget, pack_eigvecs, pack_graphs, pack_layout
+from repro.core.graph import batch_graphs
+from repro.gnn import init
+from repro.gnn.models import apply, paper_config
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade to the seeded cases only
+    HAVE_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(0)
+MODELS = [("gcn", False), ("gin", False), ("gin", True), ("gat", False),
+          ("pna", False), ("dgn", False)]
+# (n_pad, e_pad) padding fuzz: tight, loose, lopsided
+PADDINGS = [(48, 120), (80, 160), (50, 300)]
+
+
+def _random_batch(rng, n_pad, e_pad, n_graphs=3):
+    gs = []
+    for _ in range(n_graphs):
+        n = int(rng.integers(5, 14))
+        e = int(rng.integers(n, 2 * n))
+        gs.append((
+            rng.integers(0, n, e).astype(np.int32),
+            rng.integers(0, n, e).astype(np.int32),
+            rng.normal(size=(n, 9)).astype(np.float32),
+            rng.normal(size=(e, 3)).astype(np.float32),
+        ))
+    return batch_graphs(gs, n_pad=n_pad, e_pad=e_pad)
+
+
+def _bitwise(a, b, msg):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=msg)
+
+
+# ------------------------------------------------------------- direct apply
+
+
+@pytest.mark.parametrize("model,vn", MODELS)
+def test_apply_shared_layout_bitwise_equals_seed_path(model, vn, rng):
+    cfg = paper_config(model, virtual_node=vn)
+    params = init(KEY, cfg)
+    for n_pad, e_pad in PADDINGS:
+        g = _random_batch(rng, n_pad, e_pad)
+        eig = jnp.asarray(rng.normal(size=(n_pad,)), jnp.float32)
+        seed = apply(params, g, cfg, eigvec=eig, share_layout=False)
+        for tag, layout in [
+            ("in-forward", None),
+            ("device-plan", LY.build_layout(g)),
+            ("host-plan", LY.host_layout(g)),
+        ]:
+            got = apply(params, g, cfg, eigvec=eig, layout=layout)
+            _bitwise(got, seed, f"{model} vn={vn} pad=({n_pad},{e_pad}) {tag}")
+
+
+def test_host_layout_bitwise_equals_device_layout(rng):
+    for n_pad, e_pad in PADDINGS:
+        g = _random_batch(rng, n_pad, e_pad)
+        dev, host = LY.build_layout(g), LY.host_layout(g)
+        for f in ("perm", "ids_sorted", "offsets", "src_sorted", "in_degree"):
+            _bitwise(getattr(host, f), getattr(dev, f), f)
+
+
+def test_layout_plan_invariants(rng):
+    g = _random_batch(rng, 64, 160)
+    lay = LY.build_layout(g)
+    ids = np.asarray(lay.ids_sorted)
+    assert (np.diff(ids) >= 0).all(), "ids_sorted must be non-decreasing"
+    n = g.num_nodes
+    offs = np.asarray(lay.offsets)
+    counts = np.bincount(
+        np.asarray(jnp.where(g.edge_mask, g.dst, n)), minlength=n + 1
+    )[:n]
+    assert (np.diff(offs) == counts).all(), "offsets must delimit dst runs"
+    assert (np.asarray(lay.in_degree) == counts).all()
+    # padding edges sort to the end with the out-of-range key
+    e_real = int(np.asarray(g.edge_mask).sum())
+    assert (ids[e_real:] == n).all()
+
+
+def test_padding_edge_messages_are_dropped_by_plan(rng):
+    """Masking is the layout's job: garbage on padding-edge messages must
+    not reach any real destination row (ids >= N are dropped)."""
+    g = _random_batch(rng, 48, 120)
+    lay = LY.build_layout(g)
+    e_pad = g.num_edges
+    msg = jnp.asarray(rng.normal(size=(e_pad, 7)), jnp.float32)
+    garbage = jnp.where(
+        jnp.asarray(g.edge_mask)[:, None], msg, 1e30 * jnp.ones_like(msg)
+    )
+    for ops in [("sum",), ("mean", "std", "max", "min")]:
+        clean = mp.gather_scatter(g, msg, ops=ops, layout=lay)
+        dirty = mp.gather_scatter(g, garbage, ops=ops, layout=lay)
+        _bitwise(dirty, clean, f"padding garbage leaked into {ops}")
+
+
+def test_shared_forward_has_at_most_one_sort(rng):
+    """The tentpole invariant, asserted at trace level (also measured by
+    benchmarks/bench_layout.py with latency numbers — the jaxpr walker is
+    shared with it so test and bench can never disagree on the count)."""
+    from benchmarks.bench_layout import count_jaxpr_sorts as count_sorts
+
+    g = _random_batch(rng, 48, 120)
+    for model, vn in MODELS:
+        cfg = paper_config(model, virtual_node=vn)
+        params = init(KEY, cfg)
+        eig = jnp.asarray(rng.normal(size=(g.num_nodes,)), jnp.float32)
+        lay = LY.build_layout(g)
+        shared = count_sorts(jax.make_jaxpr(
+            lambda p, gg, e: apply(p, gg, cfg, eigvec=e))(params, g, eig).jaxpr)
+        preplanned = count_sorts(jax.make_jaxpr(
+            lambda p, gg, e, l: apply(p, gg, cfg, eigvec=e, layout=l)
+        )(params, g, eig, lay).jaxpr)
+        seed = count_sorts(jax.make_jaxpr(
+            lambda p, gg, e: apply(p, gg, cfg, eigvec=e, share_layout=False)
+        )(params, g, eig).jaxpr)
+        assert shared == 1, (model, vn, shared)
+        assert preplanned == 0, (model, vn, preplanned)
+        assert seed > 1, (model, vn, seed)  # what the plan amortizes away
+
+
+# ------------------------------------------------------------ engine modes
+
+
+def _reduced_config(model, vn):
+    kw = dict(num_layers=2, virtual_node=vn)
+    if model == "gat":
+        kw.update(heads=2, head_features=8)
+    elif model == "pna":
+        kw.update(hidden=16, head_hidden=(8,))
+    elif model == "dgn":
+        kw.update(hidden=16, head_hidden=(8,))
+    else:
+        kw.update(hidden=16)
+    return paper_config(model, **kw)
+
+
+def _raw_graphs(rng, k=4):
+    out = []
+    for _ in range(k):
+        n = int(rng.integers(5, 14))
+        e = int(rng.integers(n, 2 * n))
+        out.append((
+            rng.integers(0, n, e).astype(np.int32),
+            rng.integers(0, n, e).astype(np.int32),
+            rng.normal(size=(n, 9)).astype(np.float32),
+            rng.normal(size=(e, 3)).astype(np.float32),
+        ))
+    return out
+
+
+@pytest.mark.parametrize("model,vn", MODELS)
+@pytest.mark.parametrize("precision", ["fp32", "int8"])
+def test_engine_modes_bitwise_parity(model, vn, precision, rng):
+    """stream / batched / packed x {fp32, int8}: layout sharing on vs off
+    serves bitwise-identical outputs (reduced configs keep compiles cheap;
+    the structural parity is config-independent)."""
+    from repro.serve.gnn_engine import GNNEngine
+
+    cfg = _reduced_config(model, vn)
+    params = init(KEY, cfg)
+    graphs = _raw_graphs(rng)
+    eigvec = model == "dgn"
+    shared = GNNEngine(cfg, params, buckets=((16, 32),), precision=precision)
+    percall = GNNEngine(cfg, params, buckets=((16, 32),), precision=precision,
+                        share_layout=False)
+    assert shared.share_layout and not percall.share_layout
+
+    outs_a, _, _ = shared.infer_stream(graphs, with_eigvec=eigvec)
+    outs_b, _, _ = percall.infer_stream(graphs, with_eigvec=eigvec)
+    for i, (a, b) in enumerate(zip(outs_a, outs_b)):
+        _bitwise(a, b, f"stream graph {i}")
+
+    ba, _ = shared.infer_batched(graphs, batch_size=2, n_pad=32, e_pad=64,
+                                 with_eigvec=eigvec)
+    bb, _ = percall.infer_batched(graphs, batch_size=2, n_pad=32, e_pad=64,
+                                  with_eigvec=eigvec)
+    _bitwise(ba, bb, "batched")
+
+    budget = BucketBudget(n_pad=64, e_pad=128, g_pad=len(graphs))
+    packed, meta = pack_graphs(graphs, budget)
+    eig = None
+    if eigvec:
+        from repro.data.pipeline import laplacian_eigvec
+
+        vecs = [laplacian_eigvec(s, r, nf.shape[0]) for s, r, nf, _ in graphs]
+        eig = pack_eigvecs(vecs, meta)
+    pa, _ = shared.infer_packed(packed, budget, eigvec=eig,
+                                layout=pack_layout(packed))
+    pb, _ = percall.infer_packed(packed, budget, eigvec=eig)
+    _bitwise(pa, pb, "packed")
+
+
+# -------------------------------------------------------------- hypothesis
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        data=st.data(),
+        model_ix=st.integers(0, len(MODELS) - 1),
+        n=st.integers(3, 14),
+        e=st.integers(1, 28),
+        n_slack=st.integers(0, 20),
+        e_slack=st.integers(0, 40),
+    )
+    def test_fuzz_layout_parity(data, model_ix, n, e, n_slack, e_slack):
+        model, vn = MODELS[model_ix]
+        cfg = _reduced_config(model, vn)
+        params = init(KEY, cfg)
+        s = np.asarray(
+            data.draw(st.lists(st.integers(0, n - 1), min_size=e, max_size=e)),
+            np.int32,
+        )
+        r = np.asarray(
+            data.draw(st.lists(st.integers(0, n - 1), min_size=e, max_size=e)),
+            np.int32,
+        )
+        rng = np.random.default_rng(n * 1000 + e)
+        nf = rng.normal(size=(n, 9)).astype(np.float32)
+        ef = rng.normal(size=(e, 3)).astype(np.float32)
+        g = batch_graphs([(s, r, nf, ef)], n_pad=n + n_slack + 1,
+                         e_pad=e + e_slack)
+        eig = jnp.asarray(rng.normal(size=(g.num_nodes,)), jnp.float32)
+        seed = apply(params, g, cfg, eigvec=eig, share_layout=False)
+        shared = apply(params, g, cfg, eigvec=eig)
+        host = apply(params, g, cfg, eigvec=eig, layout=LY.host_layout(g))
+        np.testing.assert_array_equal(np.asarray(shared), np.asarray(seed))
+        np.testing.assert_array_equal(np.asarray(host), np.asarray(seed))

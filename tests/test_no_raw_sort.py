@@ -1,0 +1,55 @@
+"""Sort-ownership hygiene: the no-raw-sort guard passes on the real tree
+and actually catches violations (so the CI step can't silently no-op)."""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_no_raw_sort as cnrs  # noqa: E402
+
+
+def test_no_module_outside_core_sorts_edges():
+    assert cnrs.main() == 0
+
+
+def test_guard_flags_raw_sorts(tmp_path):
+    bad = tmp_path / "rogue.py"
+    bad.write_text(
+        "import jax, jax.numpy as jnp\n"
+        "from jax.numpy import argsort\n"
+        "from repro.core.scatter_gather import sort_by_segment\n"
+        "def f(ids, n):\n"
+        "    perm, s, o = sort_by_segment(ids, n)\n"
+        "    a = argsort(ids)            # bare-name import\n"
+        "    b = jnp.argsort(ids)\n"
+        "    c = jnp.lexsort((ids,))\n"
+        "    d = jnp.sort(ids)\n"
+        "    return jax.lax.sort(ids)    # dotted module chain\n"
+    )
+    errors = cnrs.check_module(bad)
+    for needle in ("sort_by_segment", "argsort", "lexsort", "`sort`"):
+        assert any(needle in e for e in errors), (needle, errors)
+    assert len(errors) == 6
+
+
+def test_guard_allows_plan_consumers_and_host_sorts(tmp_path):
+    ok = tmp_path / "fine.py"
+    ok.write_text(
+        "from repro.core import layout as LY\n"
+        "def f(layout, graph, msgs, recs):\n"
+        "    recs.sort(key=len)          # host-side list sort is fine\n"
+        "    xs = sorted(recs)\n"
+        "    return LY.segment_reduce(layout, msgs), xs\n"
+    )
+    assert cnrs.check_module(ok) == []
+
+
+def test_guard_runs_as_script():
+    r = subprocess.run(
+        [sys.executable, "tools/check_no_raw_sort.py"],
+        capture_output=True, text=True, cwd=ROOT,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout

@@ -1,0 +1,97 @@
+"""Guard: edge sorting belongs to ``core/`` — everyone else uses the plan.
+
+The one-sort-per-graph invariant (paper §3.4, ``core/layout.py``) only
+holds if no model, kernel wrapper, or serving module quietly re-derives
+the edge order.  This checker walks every module under ``src/repro/``
+outside ``core/`` and fails if it finds a call to:
+
+  * ``sort_by_segment`` (the CSC sort primitive), bare or qualified;
+  * ``argsort`` / ``lexsort`` in any spelling (bare import or attribute);
+  * ``sort`` as an attribute of an array-library module (``jnp.sort``,
+    ``np.sort``, ``jax.lax.sort``, ...) — Python's list ``.sort()`` and
+    ``sorted()`` on host data stay allowed.
+
+Modules that need the destination-ordered layout must accept a
+``core.layout.GraphLayout`` (or go through ``core.layout.edge_plan`` /
+``core.message_passing.gather_scatter``, whose fallback sorts live in
+``core/``).  ``core/`` itself, tests, tools, and benchmarks are exempt —
+tests deliberately exercise the per-call-sort parity path.
+
+Exit code 1 with a per-call report when anything sorts out of bounds.
+
+  python tools/check_no_raw_sort.py
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "src" / "repro"
+EXEMPT_PREFIX = ("core",)  # package parts under src/repro that may sort
+BANNED_ANYWHERE = {"sort_by_segment", "argsort", "lexsort"}  # bare or attr
+# `.sort(...)` is banned only on array-library modules: Python's list
+# ``.sort()`` on host data stays allowed
+ARRAY_MODULES = {"jnp", "np", "numpy", "lax", "jax"}
+
+
+def _attr_root(node: ast.AST):
+    """Leftmost Name of a dotted attribute chain (``jax.lax.sort`` -> jax)."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _banned_call(func: ast.AST):
+    """The offending name if this Call's func is a banned sort, else None."""
+    if isinstance(func, ast.Name):
+        return func.id if func.id in BANNED_ANYWHERE else None
+    if isinstance(func, ast.Attribute):
+        if func.attr in BANNED_ANYWHERE:
+            return func.attr
+        if func.attr == "sort" and _attr_root(func) in ARRAY_MODULES:
+            return "sort"
+    return None
+
+
+def check_module(path: Path) -> list[str]:
+    try:
+        rel = path.relative_to(ROOT)
+    except ValueError:  # e.g. a tmp file under test
+        rel = path
+    try:
+        tree = ast.parse(path.read_text(), filename=str(rel))
+    except SyntaxError as err:  # pragma: no cover - tier-1 would fail first
+        return [f"{rel}: unparsable ({err})"]
+    errors = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _banned_call(node.func)
+        if name is not None:
+            errors.append(
+                f"{rel}:{node.lineno}: raw edge sort `{name}` outside core/ "
+                f"— thread a core.layout.GraphLayout instead"
+            )
+    return errors
+
+
+def main() -> int:
+    errors = []
+    checked = 0
+    for path in sorted(SRC.rglob("*.py")):
+        parts = path.relative_to(SRC).parts
+        if parts[: len(EXEMPT_PREFIX)] == EXEMPT_PREFIX:
+            continue
+        checked += 1
+        errors.extend(check_module(path))
+    for e in errors:
+        print(f"ERROR: {e}")
+    if not errors:
+        print(f"no-raw-sort check OK ({checked} modules outside core/)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
