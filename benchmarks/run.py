@@ -11,6 +11,7 @@ trajectory is tracked across PRs.  Sections:
   table4 per-model resource footprint (params/FLOPs/bytes/VMEM tiles)
   quant  fp32 vs int8/ap_fixed: logit error + packed throughput
   layout shared GraphLayout plan: sort counts + stream latency + recompiles
+  multitenant  shared Executor vs N separate engines (warm time, programs)
   roofline  per-(arch x shape x mesh) dry-run roofline terms
 """
 import sys
@@ -19,13 +20,14 @@ import sys
 def main() -> None:
     sections = sys.argv[1:] or [
         "fig9", "table4", "fig8", "fig7", "stream", "quant", "layout",
-        "roofline"
+        "multitenant", "roofline"
     ]
     from benchmarks import (
         bench_fig7_latency,
         bench_fig8_large_graph,
         bench_fig9_pipeline,
         bench_layout,
+        bench_multitenant,
         bench_quant,
         bench_roofline,
         bench_stream_throughput,
@@ -41,6 +43,7 @@ def main() -> None:
         "stream": bench_stream_throughput,
         "quant": bench_quant,
         "layout": bench_layout,
+        "multitenant": bench_multitenant,
         "roofline": bench_roofline,
     }
     for s in sections:

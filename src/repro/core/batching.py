@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graph as G
@@ -115,6 +116,35 @@ def pack_layout(packed: G.Graph) -> LY.GraphLayout:
     ``GNNEngine.infer_packed`` alongside the batch.
     """
     return LY.host_layout(packed)
+
+
+def pack_prepared(
+    graphs: Sequence[RawGraph],
+    budget: BucketBudget,
+    eigvecs: Optional[Sequence[np.ndarray]] = None,
+    with_layout: bool = True,
+):
+    """Pack raw graphs and emit the whole pack-time payload as one
+    ``serve.executor.PreparedBatch``: padded graph, packed eigenvectors,
+    host-built ``GraphLayout`` plan, bucket key and warm signature.
+
+    This is the packed mode's *prepare* stage, run at pack time so the
+    compiled flush program receives everything ready-made (zero on-device
+    sorts; the paper's convert-once-at-ingest, §3.4).  Returns
+    ``(prepared, meta)`` — ``meta`` is the exact unpack bookkeeping.
+    """
+    from repro.serve import executor as X  # deferred: serve imports core
+
+    packed, meta = pack_graphs(graphs, budget)
+    eig = None
+    if eigvecs is not None:
+        eig = jnp.asarray(pack_eigvecs(eigvecs, meta), jnp.float32)
+    layout = pack_layout(packed) if with_layout else None
+    prep = X.prepared(
+        packed, eig, layout,
+        ("packed", budget.n_pad, budget.e_pad, budget.g_pad), budget.g_pad,
+    )
+    return prep, meta
 
 
 def pack_eigvecs(eigvecs: Sequence[np.ndarray], meta: PackMeta) -> np.ndarray:

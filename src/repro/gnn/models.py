@@ -13,7 +13,7 @@ the 'generic' claim.  Configurations default to the paper's §5.1 settings:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -311,3 +311,24 @@ def apply(
         pooled = mp.global_pool(g, x, op="mean", num_graphs=m)
         return L.mlp_apply(params["head"], pooled, mode=cfg.kernel_mode)
     return L.mlp_apply(params["head"], x, mode=cfg.kernel_mode)
+
+
+def forward_program(
+    cfg: GNNConfig,
+    num_graphs: Optional[int] = None,
+    share_layout: bool = True,
+) -> Callable:
+    """The engine-facing program: :func:`apply` with its statics bound.
+
+    Returns a pure ``(params, graph, eigvec, layout) -> logits`` closure —
+    the positional shape every compiled serving program shares.  Built
+    exactly once per compile-cache entry by ``serve.executor.Executor``
+    (the only module that may wrap it in ``jax.jit``; see
+    ``tools/check_engine_singlepath.py``).
+    """
+
+    def program(params, g: G.Graph, eigvec, layout):
+        return apply(params, g, cfg, eigvec=eigvec, num_graphs=num_graphs,
+                     layout=layout, share_layout=share_layout)
+
+    return program

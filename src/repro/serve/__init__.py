@@ -1,6 +1,8 @@
-"""Serving engines: streaming GNN inference (single-graph, batched, and
-packed multi-graph via the micro-batching scheduler) + batched LM
-prefill/decode."""
+"""Serving engines: the composable Executor pipeline (prepare -> constrain
+-> warm -> run) with multi-tenant registration, the single-tenant
+GNNEngine facade, the streaming micro-batching scheduler, and the batched
+LM prefill/decode server."""
+from repro.serve.executor import Executor, PreparedBatch, Tenant, trace_signature
 from repro.serve.gnn_engine import GNNEngine
 from repro.serve.engine import LMServer, ServeConfig
 from repro.serve.scheduler import Request, StreamReport, StreamScheduler

@@ -1,0 +1,448 @@
+"""The serving executor: one composable pipeline under every mode and tenant.
+
+GenGNN's thesis is one generic message-passing structure serving a diverse
+and growing set of models.  The serving stack had drifted the other way:
+every new axis (mesh, packing, precision, layout) was hand-threaded through
+``infer_stream`` / ``infer_batched`` / ``infer_packed`` separately, so the
+cost of the next axis grew with the number of modes.  This module collapses
+that mode x axis matrix into a pipeline of small stages:
+
+    prepare  ->  constrain  ->  warm  ->  run
+    (pad / eigvec /  (shard rows    (compile un-   (the one timed
+     layout / sig)    over mesh)     timed, once     execution)
+                                     per signature)
+
+* **prepare** — the ``prepare_stream`` / ``prepare_batched`` /
+  ``prepare_packed`` family turns raw input into a ``PreparedBatch``:
+  padded graph + optional eigenvector + optional layout plan + the static
+  bucket key and warm signature.  All host-side; one family subsumes the
+  per-mode padding/eigvec/layout/signature code the engine used to
+  duplicate.
+* **constrain** — logical-axis sharding of the padded node/edge rows over
+  the executor mesh (no-op without one), applied inside the compiled step.
+* **warm** — every distinct trace signature executes once untimed before
+  it may be timed; compilation never leaks into a reported latency.  One
+  signature function (:func:`trace_signature`, keyed on every input leaf's
+  shape+dtype) covers all modes — the stream mode's old two-field
+  signature missed mid-stream dtype changes.
+* **run** — the single ``time.perf_counter`` timed region in the serving
+  stack (``tools/check_engine_singlepath.py`` keeps it that way).
+
+On top of the pipeline the executor is **multi-tenant**:
+``register(name, cfg, params, precision=...)`` admits several GNN models —
+each with its own precision and layout settings — into one bucket ladder
+and one compile cache.  Programs are keyed by ``(program_key, bucket_key,
+num_graphs)`` where ``program_key = (cfg, precision, share_layout)``:
+tenants that share an architecture share compiled programs (params are
+runtime arguments, never baked in), while warm signatures carry each
+tenant's parameter-tree signature so one tenant's warmth is never
+mistaken for another's.  ``serve.gnn_engine.GNNEngine`` remains the
+single-tenant facade; ``serve.scheduler.StreamScheduler`` routes tagged
+requests to tenants and dispatches packed flushes per tenant.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Callable, Dict, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import runtime as RT
+from repro.core import batching as B
+from repro.core import graph as G
+from repro.core import layout as LY
+from repro.gnn import models as M
+
+DEFAULT_BUCKETS: Sequence[tuple] = ((32, 96), (64, 192), (128, 384), (256, 768))
+
+
+# ---------------------------------------------------------------------------
+# the prepared-batch pytree and the one warm-signature function
+# ---------------------------------------------------------------------------
+
+
+def trace_signature(graph: G.Graph, eigvec=None, layout=None) -> tuple:
+    """The warm/compile signature of one prepared input: presence flags for
+    the optional operands plus (shape, dtype) of **every** leaf.
+
+    This is the single signature function for every mode.  The stream mode
+    used to key warmth on ``("eig", with_eigvec)`` alone, so a mid-stream
+    dtype change (int edge features after float ones in the same bucket)
+    recompiled inside the timed region; keying on the leaves closes that.
+    """
+    leaves = jax.tree.leaves((graph, eigvec, layout))
+    return (("eig", eigvec is not None), ("lay", layout is not None)) + tuple(
+        (tuple(v.shape), str(v.dtype)) for v in leaves
+    )
+
+
+def params_signature(params) -> tuple:
+    """Structural signature of a parameter tree (treedef + leaf
+    shapes/dtypes).  Part of every warm signature so tenants sharing a
+    compiled program never inherit each other's warmth across a parameter
+    structure change (e.g. differently-calibrated int8-static trees)."""
+    leaves, treedef = jax.tree.flatten(params)
+    return (str(treedef),) + tuple(
+        (tuple(getattr(v, "shape", ())), str(getattr(v, "dtype", type(v).__name__)))
+        for v in leaves
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PreparedBatch:
+    """One batch, fully staged for the executor: the padded (possibly
+    packed) graph, its optional eigenvector input and layout plan, plus the
+    static routing facts — bucket key, graph-slot count, warm signature.
+
+    Produced by the ``prepare_*`` family (and by
+    ``core.batching.pack_prepared`` at pack time); consumed by
+    :meth:`Executor.warm` / :meth:`Executor.run`.  A pytree: the graph /
+    eigvec / layout leaves are data, the routing facts are static metadata.
+    """
+
+    graph: G.Graph
+    eigvec: Optional[jax.Array]
+    layout: Optional[LY.GraphLayout]
+    bucket_key: tuple = dataclasses.field(metadata=dict(static=True))
+    num_graphs: int = dataclasses.field(metadata=dict(static=True))
+    signature: tuple = dataclasses.field(metadata=dict(static=True))
+
+
+def prepared(graph: G.Graph, eigvec, layout, bucket_key: tuple,
+             num_graphs: int) -> PreparedBatch:
+    """Assemble a ``PreparedBatch``, computing its warm signature."""
+    return PreparedBatch(
+        graph=graph, eigvec=eigvec, layout=layout, bucket_key=bucket_key,
+        num_graphs=num_graphs,
+        signature=trace_signature(graph, eigvec, layout),
+    )
+
+
+# ---------------------------------------------------------------------------
+# compile-cache record + tenant registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _CompiledBucket:
+    """Per-program compile-cache record: the jitted program plus
+    warm-signature bookkeeping.  ``num_graphs`` is recorded (and part of
+    the cache key) — the old engine's ``_bucket(key, num_graphs=...)``
+    silently kept the first call's value on a cache hit."""
+
+    fn: Callable
+    num_graphs: Optional[int]
+    warm: Set[tuple] = dataclasses.field(default_factory=set)
+    compile_s: float = 0.0
+
+
+@dataclasses.dataclass
+class Tenant:
+    """One registered model: its config, (possibly quantized) params, and
+    the derived signatures that route it through the shared machinery."""
+
+    name: str
+    cfg: M.GNNConfig
+    params: dict
+    precision: str = "fp32"
+    share_layout: bool = True
+    quant_report: Optional[object] = None
+    params_sig: tuple = ()
+
+    @property
+    def program_key(self) -> tuple:
+        """Compiled programs are shared between tenants with equal keys:
+        the computation depends on (cfg, precision-structure, layout
+        sharing), never on the parameter *values*."""
+        return (self.cfg, self.precision, self.share_layout)
+
+
+# ---------------------------------------------------------------------------
+# the executor
+# ---------------------------------------------------------------------------
+
+
+class Executor:
+    """The single compile-cache / warm / timing / mesh-scope path that every
+    serving mode and every tenant runs through.
+
+    One executor owns one bucket ladder (``buckets``), one optional mesh,
+    one compile cache, and any number of registered tenants.  The
+    single-tenant ``GNNEngine`` facade registers exactly one; multi-model
+    serving registers several and routes by name.
+    """
+
+    def __init__(
+        self,
+        buckets: Sequence[tuple] = DEFAULT_BUCKETS,
+        mesh=None,
+        rules: Optional[dict] = None,
+    ):
+        self.buckets = sorted(buckets)
+        self.mesh = mesh
+        if rules is None and mesh is not None:
+            rules = RT.gnn_rules(mesh)
+        self.rules = rules
+        self.tenants: Dict[str, Tenant] = {}
+        self._compiled: Dict[tuple, _CompiledBucket] = {}
+
+    # ---------------------------------------------------------- tenants
+
+    def register(
+        self,
+        name: str,
+        cfg: M.GNNConfig,
+        params: dict,
+        precision: str = "fp32",
+        calib_graphs: Optional[Sequence[tuple]] = None,
+        qconfig=None,
+        share_layout: bool = True,
+    ) -> Tenant:
+        """Admit a model into the shared machinery.  ``precision`` selects
+        the serving arithmetic ("fp32", "int8", "int8-static", "fixed");
+        quantization happens once here and every mode then serves the
+        transformed tree.  Tenants with an equal ``program_key`` share
+        compiled programs; params and warm state never cross tenants."""
+        if name in self.tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        quant_report = None
+        if precision != "fp32":
+            from repro.quant import apply as QA
+
+            qcfg = qconfig or QA.precision_qconfig(precision)
+            if (qcfg.scheme == "int8" and qcfg.act_mode == "static"
+                    and not calib_graphs):
+                raise ValueError(
+                    "static-activation int8 needs calib_graphs (raw COO "
+                    "tuples) to calibrate activation ranges"
+                )
+            params, quant_report = QA.quantize_model(
+                params, cfg, calib_graphs or (), qcfg
+            )
+        tenant = Tenant(
+            name=name, cfg=cfg, params=params, precision=precision,
+            share_layout=share_layout, quant_report=quant_report,
+            params_sig=params_signature(params),
+        )
+        self.tenants[name] = tenant
+        return tenant
+
+    def tenant(self, model: Optional[str] = None) -> Tenant:
+        """Resolve a tenant by name; ``None`` means the sole tenant."""
+        if model is not None:
+            try:
+                return self.tenants[model]
+            except KeyError:
+                raise KeyError(
+                    f"no tenant {model!r}; registered: {sorted(self.tenants)}"
+                ) from None
+        if len(self.tenants) == 1:
+            return next(iter(self.tenants.values()))
+        raise KeyError(
+            f"model name required: {len(self.tenants)} tenants registered "
+            f"({sorted(self.tenants)})"
+        )
+
+    # --------------------------------------------------------- plumbing
+
+    @property
+    def compile_seconds(self) -> float:
+        """Total compile/warm-up time across all programs (excluded from
+        every reported latency)."""
+        return sum(cb.compile_s for cb in self._compiled.values())
+
+    def _mesh_scope(self):
+        """Context under which programs trace/run: installs the executor's
+        mesh + rules so logical_constraint resolves; nullcontext otherwise."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        stack = contextlib.ExitStack()
+        stack.enter_context(RT.use_mesh(self.mesh))
+        stack.enter_context(RT.active_rules(self.rules))
+        return stack
+
+    def _constrain_graph(self, g: G.Graph) -> G.Graph:
+        """Shard the padded node/edge rows over the executor mesh."""
+        lc = RT.logical_constraint
+        return dataclasses.replace(
+            g,
+            node_feat=lc(g.node_feat, ("nodes", None)),
+            edge_index=lc(g.edge_index, (None, "edges")),
+            edge_feat=lc(g.edge_feat, ("edges", None)),
+            node_mask=lc(g.node_mask, ("nodes",)),
+            edge_mask=lc(g.edge_mask, ("edges",)),
+            graph_id=lc(g.graph_id, ("nodes",)),
+        )
+
+    def _constrain_layout(self, layout: LY.GraphLayout) -> LY.GraphLayout:
+        """Shard the plan's edge-order arrays like the edge rows they
+        index (offsets is (N+1,) and stays replicated)."""
+        lc = RT.logical_constraint
+        return dataclasses.replace(
+            layout,
+            perm=lc(layout.perm, ("edges",)),
+            ids_sorted=lc(layout.ids_sorted, ("edges",)),
+            src_sorted=lc(layout.src_sorted, ("edges",)),
+            in_degree=lc(layout.in_degree, ("nodes",)),
+        )
+
+    def bucket_for(self, n: int, e: int) -> tuple:
+        """Smallest configured (N_pad, E_pad) bucket holding (n, e)."""
+        for nb, eb in self.buckets:
+            if n <= nb and e <= eb:
+                return nb, eb
+        raise ValueError(
+            f"graph ({n},{e}) exceeds largest bucket {self.buckets[-1]}"
+        )
+
+    def _program(self, tenant: Tenant, bucket_key: tuple,
+                 num_graphs: Optional[int]) -> _CompiledBucket:
+        """The compiled program for (tenant-architecture, bucket, slots).
+
+        ``num_graphs`` is part of the cache key — two calls that share a
+        bucket but size their pooled buffers differently must never share
+        a program (the old engine's closure captured the first call's
+        value).  The forward itself comes from the one program builder,
+        ``gnn.models.forward_program``; this is the only place in the
+        serving stack that constructs a jitted program.
+        """
+        key = (tenant.program_key, bucket_key, num_graphs)
+        cb = self._compiled.get(key)
+        if cb is None:
+            program = M.forward_program(
+                tenant.cfg, num_graphs=num_graphs,
+                share_layout=tenant.share_layout,
+            )
+
+            @jax.jit
+            def run(params, g: G.Graph, eigvec, layout):
+                g = self._constrain_graph(g)
+                if eigvec is not None:
+                    eigvec = RT.logical_constraint(eigvec, ("nodes",))
+                if layout is not None:
+                    layout = self._constrain_layout(layout)
+                return program(params, g, eigvec, layout)
+
+            cb = _CompiledBucket(fn=run, num_graphs=num_graphs)
+            self._compiled[key] = cb
+        if cb.num_graphs != num_graphs:  # pragma: no cover - key carries it
+            raise AssertionError(
+                f"compile-cache record for {key} carries num_graphs="
+                f"{cb.num_graphs}, requested {num_graphs}"
+            )
+        return cb
+
+    def _warm(self, cb: _CompiledBucket, sig: tuple, params, p: PreparedBatch) -> float:
+        """Execute once untimed if ``sig`` hasn't run through this program
+        yet (covers compilation for every distinct trace signature, not
+        just the first call).  Returns the time spent warming."""
+        if sig in cb.warm:
+            return 0.0
+        t0 = time.perf_counter()
+        jax.block_until_ready(cb.fn(params, p.graph, p.eigvec, p.layout))
+        dt = time.perf_counter() - t0
+        cb.warm.add(sig)
+        cb.compile_s += dt
+        return dt
+
+    # ---------------------------------------------------------- prepare
+
+    def prepare_stream(self, raw: tuple, with_eigvec: bool = False) -> PreparedBatch:
+        """Stage one raw COO graph for batch-size-1 streaming: pad into the
+        smallest bucket; no layout plan (the compiled step converts COO
+        once on device — the single timed sort of the forward)."""
+        s, r, nf, ef = raw[:4]
+        nb, eb = self.bucket_for(nf.shape[0], len(s))
+        g = G.from_numpy(s, r, nf, ef, n_pad=nb, e_pad=eb)
+        eig = self._eigvec(s, r, nf.shape[0], nb) if with_eigvec else None
+        return prepared(g, eig, None, ("stream", nb, eb), 1)
+
+    def prepare_batched(self, chunk: Sequence[tuple], batch_size: int,
+                        n_pad: int, e_pad: int,
+                        with_eigvec: bool = False) -> PreparedBatch:
+        """Stage one fixed-size padded batch: concatenate the chunk's raw
+        graphs, build per-graph eigenvectors at the packed node offsets
+        (host-side, before the timed region)."""
+        gs = [(g[0], g[1], g[2], g[3]) for g in chunk]
+        g = G.batch_graphs(gs, n_pad=n_pad, e_pad=e_pad)
+        eig = None
+        if with_eigvec:
+            vec = np.zeros((n_pad,), np.float32)
+            off = 0
+            for s, r, nf, _ in gs:
+                n = nf.shape[0]
+                vec[off : off + n] = np.asarray(self._eigvec(s, r, n, n))
+                off += n
+            eig = jnp.asarray(vec)
+        return prepared(g, eig, None,
+                        ("batched", n_pad, e_pad, batch_size), batch_size)
+
+    def prepare_packed(self, packed: G.Graph, budget, eigvec=None,
+                       layout=None, model: Optional[str] = None) -> PreparedBatch:
+        """Stage one already-packed multi-graph batch (``core.batching``).
+
+        ``layout`` is normally the plan the packer emitted at pack time
+        (zero on-device sorts in the flushed program); when absent and the
+        tenant shares layouts, the host plan is built here — the plan
+        always travels with its batch, never a sort inside the program.
+        """
+        if eigvec is not None:
+            eigvec = jnp.asarray(eigvec, jnp.float32)
+        if layout is None and self.tenant(model).share_layout:
+            layout = B.pack_layout(packed)
+        return prepared(packed, eigvec, layout,
+                        ("packed", budget.n_pad, budget.e_pad, budget.g_pad),
+                        budget.g_pad)
+
+    def has_program(self, bucket_key: tuple, num_graphs: int,
+                    model: Optional[str] = None) -> bool:
+        """Whether a compiled program already exists for this tenant's
+        architecture at (bucket, slots) — the scheduler's eager-prewarm
+        skip check."""
+        key = (self.tenant(model).program_key, bucket_key, num_graphs)
+        return key in self._compiled
+
+    # --------------------------------------------------------- warm/run
+
+    def warm(self, p: PreparedBatch, model: Optional[str] = None) -> float:
+        """Compile/warm this batch's signature without a timed execution
+        (the scheduler pre-warms budget-ladder rungs with this).  Returns
+        seconds spent (0.0 when already warm); also tracked in
+        ``compile_seconds``."""
+        tenant = self.tenant(model)
+        cb = self._program(tenant, p.bucket_key, p.num_graphs)
+        with self._mesh_scope():
+            return self._warm(cb, (tenant.params_sig,) + p.signature,
+                              tenant.params, p)
+
+    def run(self, p: PreparedBatch,
+            model: Optional[str] = None) -> Tuple[np.ndarray, float]:
+        """The one timed execution path.  Warms the signature first (un-
+        timed, recorded in ``compile_seconds``), then runs and returns
+        ``(outputs, seconds)`` — the only ``perf_counter`` region in the
+        serving stack."""
+        tenant = self.tenant(model)
+        cb = self._program(tenant, p.bucket_key, p.num_graphs)
+        with self._mesh_scope():
+            self._warm(cb, (tenant.params_sig,) + p.signature, tenant.params, p)
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(
+                cb.fn(tenant.params, p.graph, p.eigvec, p.layout)
+            )
+            dt = time.perf_counter() - t0
+        return np.asarray(out), dt
+
+    # ------------------------------------------------------------- misc
+
+    def _eigvec(self, s, r, n, n_pad):
+        """First non-trivial Laplacian eigenvector — DGN's *input* (the
+        paper passes precomputed eigenvectors as a parameter; for synthetic
+        streams we compute it on the host as part of data generation)."""
+        from repro.data.pipeline import laplacian_eigvec
+
+        return jnp.asarray(laplacian_eigvec(s, r, n, n_pad))

@@ -1,11 +1,11 @@
-"""GNN serving engine — the paper's real-time inference mode.
+"""GNN serving engine — the single-tenant facade over ``serve.executor``.
 
 Raw COO graphs are streamed in consecutively with *zero preprocessing*:
-the engine pads each graph into a (N_pad, E_pad) bucket (static shapes for
-the compiled program; the paper's analogue is the fixed on-chip buffer
-size), converts COO->CSC *on device inside the compiled step* (the
-paper's on-chip converter), and runs any registered model through the one
-generic message-passing program.
+each graph is padded into a (N_pad, E_pad) bucket (static shapes for the
+compiled program; the paper's analogue is the fixed on-chip buffer size),
+COO is converted to the destination-ordered layout once per forward (the
+paper's on-chip converter, §3.4), and any registered model runs through
+the one generic message-passing program.
 
 Three modes, measured by benchmarks/bench_fig7_latency.py and
 benchmarks/bench_stream_throughput.py:
@@ -15,55 +15,25 @@ benchmarks/bench_stream_throughput.py:
     ``core.batching.pack_graphs``; fed by ``serve.scheduler``'s
     micro-batcher), the streaming-throughput mode
 
-Both run through ``repro.runtime``: pass a ``mesh`` and the engine shards
-the padded node/edge axes over it via ``logical_constraint`` (logical axes
-"nodes"/"edges"/"graphs", resolved by ``runtime.gnn_rules``).  Without a
-mesh the constraints are no-ops, so CPU tests and single-device serving
-are untouched.
-
-Each (bucket, mode) pair owns a ``_CompiledBucket`` record: the jitted
-program plus warm-signature bookkeeping, so compilation time never leaks
-into a timed region — a fresh signature appearing mid-stream (first chunk
-of a new shape, eigvec toggling) is warmed untimed first.
-
-Every mode shares one ``core.layout.GraphLayout`` plan per forward (the
-paper's convert-COO-once, §3.4): stream/batched programs build the plan
-on device inside the compiled step (exactly one sort, timed honestly as
-part of the forward), while ``infer_packed`` accepts the plan the packer
-emitted at pack time (``core.batching.pack_layout``) so the packed
-program runs with zero on-device sorts.  The plan rides the same bucket
-signature as the graph — same padded shapes, same compiled program — so
-layout threading adds no compile-cache keys and no recompiles.
-``share_layout=False`` reverts every mode to the seed per-call-sort path
-(parity tests / A-B benchmarks only).
+This module contains **no** compile-cache, warm, timing, or mesh-scope
+logic of its own (``tools/check_engine_singlepath.py`` enforces that):
+every mode is a thin wrapper that *prepares* input through the executor's
+``prepare_stream`` / ``prepare_batched`` / ``prepare_packed`` family and
+*runs* it through the executor's one warm-before-timing path.  The
+engine's constructor registers exactly one tenant; multi-model serving
+registers several tenants on one ``Executor`` directly and shares the
+bucket ladder, compile cache, and scheduler across them.
 """
 from __future__ import annotations
 
-import contextlib
-import dataclasses
-import time
-from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set
+from typing import Dict, Iterable, List, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import runtime as RT
-from repro.core import batching as B
-from repro.core import graph as G
-from repro.core import layout as LY
 from repro.gnn import models as M
+from repro.serve.executor import DEFAULT_BUCKETS, Executor, _CompiledBucket
 
-DEFAULT_BUCKETS: Sequence[tuple] = ((32, 96), (64, 192), (128, 384), (256, 768))
-
-
-@dataclasses.dataclass
-class _CompiledBucket:
-    """Per-bucket compile-cache record."""
-
-    fn: Callable
-    warm: Set[tuple] = dataclasses.field(default_factory=set)
-    compile_s: float = 0.0
+__all__ = ["GNNEngine", "DEFAULT_BUCKETS"]
 
 
 class GNNEngine:
@@ -78,124 +48,106 @@ class GNNEngine:
         calib_graphs: Optional[Sequence[tuple]] = None,
         qconfig=None,
         share_layout: bool = True,
+        executor: Optional[Executor] = None,
+        name: str = "default",
     ):
         """``precision`` selects the serving arithmetic: "fp32" (default),
         "int8" (W8A8 with dynamic per-node activation scales; no
         calibration needed), "int8-static" (calibrated per-tensor
         activation scales; requires ``calib_graphs``, a few raw COO
         tuples), or "fixed" (the paper's ap_fixed<W,I> emulation).
-        Quantization happens once here — every mode (stream / batched /
-        packed, with or without a mesh) then serves the transformed params
-        through the identical bucket/compile machinery.
+        Quantization happens once at registration — every mode (stream /
+        batched / packed, with or without a mesh) then serves the
+        transformed params through the identical bucket/compile machinery.
 
         ``share_layout`` (default on) threads one ``GraphLayout`` plan per
         forward through every model layer; off = the seed per-call-sort
-        path, retained only for parity tests and A/B benchmarks."""
-        self.cfg = cfg
-        self.precision = precision
-        self.share_layout = share_layout
-        self.quant_report = None
-        if precision != "fp32":
-            from repro.quant import apply as QA
+        path, retained only for parity tests and A/B benchmarks.
 
-            qcfg = qconfig or QA.precision_qconfig(precision)
-            if (qcfg.scheme == "int8" and qcfg.act_mode == "static"
-                    and not calib_graphs):
-                raise ValueError(
-                    "static-activation int8 needs calib_graphs (raw COO "
-                    "tuples) to calibrate activation ranges"
-                )
-            params, self.quant_report = QA.quantize_model(
-                params, cfg, calib_graphs or (), qcfg
+        ``executor`` attaches this engine as tenant ``name`` on an
+        existing :class:`Executor` (sharing its bucket ladder and compile
+        cache with other tenants); by default the engine owns a fresh
+        single-tenant executor built from ``buckets`` / ``mesh`` /
+        ``rules`` — those three belong to the executor, so passing them
+        alongside ``executor`` is rejected rather than silently ignored."""
+        if executor is not None and (
+            tuple(buckets) != tuple(DEFAULT_BUCKETS)
+            or mesh is not None or rules is not None
+        ):
+            raise ValueError(
+                "buckets/mesh/rules belong to the executor: configure them "
+                "on the Executor you pass, not on the facade"
             )
-        self.params = params
-        self.buckets = sorted(buckets)
-        self.mesh = mesh
-        if rules is None and mesh is not None:
-            rules = RT.gnn_rules(mesh)
-        self.rules = rules
-        self._compiled: Dict[tuple, _CompiledBucket] = {}
+        self.executor = executor or Executor(
+            buckets=buckets, mesh=mesh, rules=rules
+        )
+        self._tenant = self.executor.register(
+            name, cfg, params, precision=precision,
+            calib_graphs=calib_graphs, qconfig=qconfig,
+            share_layout=share_layout,
+        )
+        self.cfg = cfg
 
     # ---------------------------------------------------------- plumbing
+    # (facade views only — the state itself lives on the executor)
+
+    @property
+    def name(self) -> str:
+        return self._tenant.name
+
+    @property
+    def params(self) -> dict:
+        return self._tenant.params
+
+    @property
+    def precision(self) -> str:
+        return self._tenant.precision
+
+    @property
+    def share_layout(self) -> bool:
+        return self._tenant.share_layout
+
+    @property
+    def quant_report(self):
+        return self._tenant.quant_report
+
+    @property
+    def buckets(self) -> Sequence[tuple]:
+        return self.executor.buckets
+
+    @property
+    def mesh(self):
+        return self.executor.mesh
+
+    @property
+    def rules(self):
+        return self.executor.rules
 
     @property
     def compile_seconds(self) -> float:
-        """Total compile/warm-up time across all buckets (excluded from
-        every reported latency)."""
+        """Compile/warm-up time across this tenant's buckets (excluded
+        from every reported latency).  Filtered by program key like
+        ``_compiled``, so two facades sharing one executor never see each
+        other's warm cost (for same-architecture tenants the program —
+        and hence its pooled warm cost — is genuinely shared)."""
         return sum(cb.compile_s for cb in self._compiled.values())
 
-    def _mesh_scope(self):
-        """Context under which programs trace/run: installs the engine's
-        mesh + rules so logical_constraint resolves; nullcontext otherwise."""
-        if self.mesh is None:
-            return contextlib.nullcontext()
-        stack = contextlib.ExitStack()
-        stack.enter_context(RT.use_mesh(self.mesh))
-        stack.enter_context(RT.active_rules(self.rules))
-        return stack
-
-    def _constrain_graph(self, g: G.Graph) -> G.Graph:
-        """Shard the padded node/edge rows over the engine mesh."""
-        lc = RT.logical_constraint
-        return dataclasses.replace(
-            g,
-            node_feat=lc(g.node_feat, ("nodes", None)),
-            edge_index=lc(g.edge_index, (None, "edges")),
-            edge_feat=lc(g.edge_feat, ("edges", None)),
-            node_mask=lc(g.node_mask, ("nodes",)),
-            edge_mask=lc(g.edge_mask, ("edges",)),
-            graph_id=lc(g.graph_id, ("nodes",)),
-        )
-
-    def _constrain_layout(self, layout: LY.GraphLayout) -> LY.GraphLayout:
-        """Shard the plan's edge-order arrays like the edge rows they
-        index (offsets is (N+1,) and stays replicated)."""
-        lc = RT.logical_constraint
-        return dataclasses.replace(
-            layout,
-            perm=lc(layout.perm, ("edges",)),
-            ids_sorted=lc(layout.ids_sorted, ("edges",)),
-            src_sorted=lc(layout.src_sorted, ("edges",)),
-            in_degree=lc(layout.in_degree, ("nodes",)),
-        )
+    @property
+    def _compiled(self) -> Dict[tuple, _CompiledBucket]:
+        """This tenant's compile-cache records, keyed by bucket key —
+        the view tests and benchmarks inspect."""
+        pk = self._tenant.program_key
+        return {
+            bucket_key: cb
+            for (prog_key, bucket_key, _ng), cb in self.executor._compiled.items()
+            if prog_key == pk
+        }
 
     def _bucket_for(self, n: int, e: int) -> tuple:
-        for nb, eb in self.buckets:
-            if n <= nb and e <= eb:
-                return nb, eb
-        raise ValueError(f"graph ({n},{e}) exceeds largest bucket {self.buckets[-1]}")
+        return self.executor.bucket_for(n, e)
 
-    def _bucket(self, key: tuple, num_graphs: Optional[int] = None) -> _CompiledBucket:
-        cb = self._compiled.get(key)
-        if cb is None:
-
-            @jax.jit
-            def run(params, g: G.Graph, eigvec, layout):
-                g = self._constrain_graph(g)
-                if eigvec is not None:
-                    eigvec = RT.logical_constraint(eigvec, ("nodes",))
-                if layout is not None:
-                    layout = self._constrain_layout(layout)
-                return M.apply(params, g, self.cfg, eigvec=eigvec,
-                               num_graphs=num_graphs, layout=layout,
-                               share_layout=self.share_layout)
-
-            cb = _CompiledBucket(fn=run)
-            self._compiled[key] = cb
-        return cb
-
-    def _warm(self, cb: _CompiledBucket, sig: tuple, *args) -> float:
-        """Execute once untimed if ``sig`` hasn't run through this bucket
-        yet (covers compilation for every distinct trace signature, not
-        just the first call).  Returns the time spent warming."""
-        if sig in cb.warm:
-            return 0.0
-        t0 = time.perf_counter()
-        jax.block_until_ready(cb.fn(self.params, *args))
-        dt = time.perf_counter() - t0
-        cb.warm.add(sig)
-        cb.compile_s += dt
-        return dt
+    def _eigvec(self, s, r, n, n_pad):
+        return self.executor._eigvec(s, r, n, n_pad)
 
     # ------------------------------------------------------------- modes
 
@@ -204,109 +156,57 @@ class GNNEngine:
         [, label]) tuples.  Returns (outputs, per-graph latencies seconds,
         compile seconds).  Compilation per bucket is warmed outside the
         timed region and reported separately."""
+        ex = self.executor
         outs: List[np.ndarray] = []
         lats: List[float] = []
-        compile_time = 0.0
-        with self._mesh_scope():
-            for graph in graphs:
-                s, r, nf, ef = graph[:4]
-                nb, eb = self._bucket_for(nf.shape[0], len(s))
-                g = G.from_numpy(s, r, nf, ef, n_pad=nb, e_pad=eb)
-                eig = self._eigvec(s, r, nf.shape[0], nb) if with_eigvec else None
-                cb = self._bucket(("stream", nb, eb), num_graphs=1)
-                # layout=None: the compiled step converts COO once on
-                # device (the single timed sort of the forward)
-                compile_time += self._warm(cb, ("eig", with_eigvec), g, eig, None)
-                t0 = time.perf_counter()
-                out = jax.block_until_ready(cb.fn(self.params, g, eig, None))
-                lats.append(time.perf_counter() - t0)
-                outs.append(np.asarray(out[:1]))
-        return outs, np.asarray(lats), compile_time
+        compile_before = self.compile_seconds  # this tenant's only
+        for graph in graphs:
+            p = ex.prepare_stream(graph, with_eigvec=with_eigvec)
+            out, dt = ex.run(p, model=self.name)
+            lats.append(dt)
+            outs.append(out[:1])
+        return outs, np.asarray(lats), self.compile_seconds - compile_before
 
     def infer_batched(self, graphs: Sequence[tuple], batch_size: int,
                       n_pad: int, e_pad: int, with_eigvec: bool = False):
         """Padded-batch mode.  Returns (outputs (n_graphs, out), seconds/graph)."""
-        cb = self._bucket(("batched", n_pad, e_pad, batch_size),
-                          num_graphs=batch_size)
+        ex = self.executor
         outs = []
         total = 0.0
-        with self._mesh_scope():
-            for i in range(0, len(graphs), batch_size):
-                chunk = graphs[i : i + batch_size]
-                gs = [(g[0], g[1], g[2], g[3]) for g in chunk]
-                g = G.batch_graphs(gs, n_pad=n_pad, e_pad=e_pad)
-                eig = None
-                if with_eigvec:
-                    # per-graph eigenvectors at the packed node offsets
-                    # (host-side, built before the timed region)
-                    vec = np.zeros((n_pad,), np.float32)
-                    off = 0
-                    for s, r, nf, _ in gs:
-                        n = nf.shape[0]
-                        vec[off : off + n] = np.asarray(
-                            self._eigvec(s, r, n, n)
-                        )
-                        off += n
-                    eig = jnp.asarray(vec)
-                # warm this chunk's exact trace signature untimed: a new
-                # signature can show up mid-stream (first chunk, eigvec
-                # toggling, a dtype change), not only at i == 0.
-                sig = ("eig", with_eigvec) + tuple(
-                    (tuple(v.shape), str(v.dtype)) for v in jax.tree.leaves(g)
-                )
-                self._warm(cb, sig, g, eig, None)
-                t0 = time.perf_counter()
-                out = jax.block_until_ready(cb.fn(self.params, g, eig, None))
-                total += time.perf_counter() - t0
-                outs.append(np.asarray(out[: len(chunk)]))
+        for i in range(0, len(graphs), batch_size):
+            chunk = graphs[i : i + batch_size]
+            p = ex.prepare_batched(chunk, batch_size, n_pad, e_pad,
+                                   with_eigvec=with_eigvec)
+            out, dt = ex.run(p, model=self.name)
+            total += dt
+            outs.append(out[: len(chunk)])
         return np.concatenate(outs), total / len(graphs)
 
-    def infer_packed(self, packed: G.Graph, budget, eigvec=None,
+    def infer_packed(self, packed, budget, eigvec=None,
                      warm_only: bool = False, layout=None):
         """Run one already-packed multi-graph batch (``core.batching``).
 
         ``budget`` is the ``BucketBudget`` the batch was packed against —
         it is the compile-cache key, so every batch packed to the same
         budget reuses one compiled program regardless of how many real
-        graphs it carries.  Works identically with and without an engine
-        mesh (the packed node/edge rows shard exactly like a single
-        graph's).  Returns (outputs (G_pad, out), compute seconds) with
-        warm/compile time excluded and tracked in ``compile_seconds``.
+        graphs it carries.  Works identically with and without a mesh.
+        Returns (outputs (G_pad, out), compute seconds) with warm/compile
+        time excluded and tracked in ``compile_seconds``.
 
         ``layout`` is the batch's ``GraphLayout`` plan, normally emitted
-        by the packer (``core.batching.pack_layout``) so the compiled
-        program contains zero on-device sorts; when absent (and layout
-        sharing is on) the engine builds the host plan here — the plan
-        always travels with its batch, never a sort inside the program.
-        Plan shapes are functions of the budget, so the compile signature
-        per bucket is unchanged.
+        by the packer (``core.batching.pack_layout`` /
+        ``core.batching.pack_prepared``) so the compiled program contains
+        zero on-device sorts; when absent (and layout sharing is on) the
+        executor builds the host plan during prepare.
 
         ``warm_only`` compiles/warms this batch's signature and returns
         (None, 0.0) without a second timed execution — the scheduler uses
         it to pre-warm budget-ladder rungs.
         """
-        key = ("packed", budget.n_pad, budget.e_pad, budget.g_pad)
-        cb = self._bucket(key, num_graphs=budget.g_pad)
-        if eigvec is not None:
-            eigvec = jnp.asarray(eigvec, jnp.float32)
-        if layout is None and self.share_layout:
-            layout = B.pack_layout(packed)
-        with self._mesh_scope():
-            sig = ("eig", eigvec is not None, "lay", layout is not None) + tuple(
-                (tuple(v.shape), str(v.dtype)) for v in jax.tree.leaves(packed)
-            )
-            self._warm(cb, sig, packed, eigvec, layout)
-            if warm_only:
-                return None, 0.0
-            t0 = time.perf_counter()
-            out = jax.block_until_ready(cb.fn(self.params, packed, eigvec, layout))
-            dt = time.perf_counter() - t0
-        return np.asarray(out), dt
-
-    def _eigvec(self, s, r, n, n_pad):
-        """First non-trivial Laplacian eigenvector — DGN's *input* (the
-        paper passes precomputed eigenvectors as a parameter; for synthetic
-        streams we compute it on the host as part of data generation)."""
-        from repro.data.pipeline import laplacian_eigvec
-
-        return jnp.asarray(laplacian_eigvec(s, r, n, n_pad))
+        ex = self.executor
+        p = ex.prepare_packed(packed, budget, eigvec=eigvec, layout=layout,
+                              model=self.name)
+        if warm_only:
+            ex.warm(p, model=self.name)
+            return None, 0.0
+        return ex.run(p, model=self.name)

@@ -1,35 +1,47 @@
-"""Streaming multi-graph scheduler: request queue + micro-batcher.
+"""Streaming multi-graph scheduler: request queue + multi-tenant micro-batcher.
 
 The paper's real-time mode serves one graph per program dispatch; under
 heavy traffic the dispatch overhead dominates for molecule-sized graphs.
 FlowGNN's multi-queue insight applies directly: keep *multiple open
-buckets* — one per compiled-shape signature — and greedily pack arriving
-graphs into the open bucket for their signature until the bucket's
-``BucketBudget`` is exhausted or a max-wait deadline expires, then flush
-the packed batch through ``GNNEngine.infer_packed``.  Every flush of a
+buckets* — one per (tenant, compiled-shape signature) — and greedily pack
+arriving graphs into the open bucket for their signature until the
+bucket's ``BucketBudget`` is exhausted or a max-wait deadline expires,
+then flush the packed batch through the executor.  Every flush of a
 signature reuses the same compiled program, so after one warm flush per
 signature the stream runs with zero recompiles.
 
 Admission is per-bucket: a request maps to the smallest single-graph
-bucket that fits it (the engine's ``_bucket_for`` signature), and its
-packed budget is ``capacity`` multiples of that bucket with ``2*capacity``
-graph slots — small graphs pack denser than the worst case, so the node /
-edge budgets bind before the slot count does.
+bucket that fits it (``Executor.bucket_for``), and its packed budget is
+``capacity`` multiples of that bucket with ``2*capacity`` graph slots —
+small graphs pack denser than the worst case, so the node / edge budgets
+bind before the slot count does.
 
 Each signature owns a *budget ladder* (rungs 1, 2, 3, 4, 6, 8, 12, ...,
 ``capacity`` multiples of the base bucket — powers of two and their
 1.5x midpoints, bounding padding slack at a flush to ~33%): admission
 always targets the top rung, but a flush executes on the smallest rung
 that fits what actually accumulated, so a deadline flush carrying one
-graph runs a program no bigger than the single-graph mode's.  Every rung
-is warmed (compiled untimed) the first time its signature appears, so a
-live stream never recompiles after warmup no matter how load fluctuates.
+graph runs a program no bigger than the single-graph mode's.  Ladder
+*geometry* is shared across tenants (one ladder per signature, however
+many models it serves); warm state is per tenant program, governed by
+``prewarm``:
 
-Every flush also carries its ``GraphLayout`` plan: ``_execute`` emits it
-host-side right after packing (``core.batching.pack_layout``) and hands
-it through ``infer_packed``, so the flushed program performs zero
-on-device sorts — the paper's COO conversion happens once at pack time
-and is reused by every layer of the flushed model (§3.4).
+  * ``"eager"`` (single-tenant default, the historical behaviour): every
+    rung compiles untimed the first time its signature appears, so a live
+    stream never recompiles after warmup no matter how load fluctuates.
+  * ``"lazy"`` (multi-tenant default): a rung warms — still strictly
+    outside the timed region, tracked in ``compile_seconds`` — on its
+    first flush.  One control plane seeing all tenants' traffic only pays
+    for the (tenant, rung) programs the load actually exercises, which is
+    where the shared executor's warm-time and memory win over N separate
+    engines comes from (measured by ``benchmarks/bench_multitenant.py``).
+
+Every flush carries its pack-time payload: ``_execute`` calls
+``core.batching.pack_prepared``, which emits the padded graph, the packed
+eigenvectors, and the host-built ``GraphLayout`` plan as one
+``PreparedBatch`` — the flushed program performs zero on-device sorts
+(the paper's COO conversion happens once at pack time and is reused by
+every layer, §3.4).
 
 ``StreamScheduler.run`` is an event-driven simulation of a live stream on
 a single serial executor: arrivals are offered at a configurable rate
@@ -37,33 +49,36 @@ a single serial executor: arrivals are offered at a configurable rate
 virtual clock folds the two together — so reported per-request latency
 includes queueing delay (time waiting for the bucket to fill or the
 device to free up), which is what a latency-vs-throughput sweep needs.
+Multi-tenant streams tag each request with its model name
+(``run(graphs, models=[...])``); packed flushes dispatch per tenant.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from collections import Counter
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.batching import (
     BucketBudget,
     graph_sizes,
-    pack_eigvecs,
-    pack_graphs,
-    pack_layout,
+    pack_prepared,
     unpack_outputs,
 )
+from repro.serve.executor import Executor
 
 
 @dataclasses.dataclass
 class Request:
-    """One in-flight graph: raw COO payload + arrival timestamp."""
+    """One in-flight graph: raw COO payload + arrival timestamp + the
+    tenant it is routed to (``None`` = the sole registered model)."""
 
     rid: int
     graph: tuple  # (senders, receivers, node_feat[, edge_feat])
     arrival_s: float
+    model: Optional[str] = None
     n: int = 0
     e: int = 0
 
@@ -98,17 +113,19 @@ class StreamReport:
 
 
 class _OpenBucket:
-    """One signature's accumulating micro-batch.
+    """One (tenant, signature)'s accumulating micro-batch.
 
     Admission is checked against the *top* rung of the signature's ladder;
     ``rung()`` picks the smallest rung the accumulated batch fits, which
     is the program a flush actually executes.
     """
 
-    __slots__ = ("ladder", "budget", "requests", "n_used", "e_used", "deadline_s")
+    __slots__ = ("model", "ladder", "budget", "requests", "n_used", "e_used",
+                 "deadline_s")
 
     def __init__(self, ladder: Sequence[BucketBudget], opened_at_s: float,
-                 max_wait_s: float):
+                 max_wait_s: float, model: Optional[str] = None):
+        self.model = model
         self.ladder = ladder
         self.budget = ladder[-1]
         self.requests: List[Request] = []
@@ -139,45 +156,74 @@ class _OpenBucket:
 
 
 class StreamScheduler:
-    """Micro-batching front-end for ``GNNEngine``.
+    """Micro-batching front-end for the serving executor.
 
+    engine:      a single-tenant ``GNNEngine`` facade **or** a multi-tenant
+                 ``Executor`` — all compute and warm bookkeeping goes
+                 through the executor either way.
     capacity:    packed budgets are ``capacity`` multiples of the base
                  single-graph bucket (with ``2*capacity`` graph slots).
     max_wait_s:  a bucket flushes at latest this long after it opened —
                  the latency ceiling a request pays for batching.
     with_eigvec: compute DGN's Laplacian-eigenvector input per request
-                 (host-side, part of data generation, as in the paper).
+                 (host-side, part of data generation, as in the paper);
+                 ``"auto"`` resolves per tenant (eigvec iff the tenant's
+                 model is DGN) — the multi-tenant setting.
+    prewarm:     ``"eager"`` / ``"lazy"`` ladder warm policy (see module
+                 docstring); default eager for a single engine (the
+                 historical guarantee), lazy for a multi-tenant executor.
     """
 
     def __init__(
         self,
-        engine,
+        engine: Union[Executor, object],
         capacity: int = 4,
         max_wait_s: float = 0.002,
-        with_eigvec: bool = False,
+        with_eigvec: Union[bool, str] = False,
         budgets: Optional[Dict[tuple, Sequence[BucketBudget]]] = None,
+        prewarm: Optional[str] = None,
     ):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
-        self.engine = engine
+        if isinstance(engine, Executor):
+            self.engine = None
+            self.executor = engine
+            self._default_model = None
+        else:  # a GNNEngine facade
+            self.engine = engine
+            self.executor = engine.executor
+            self._default_model = engine.name
+        if prewarm is None:
+            prewarm = "eager" if self.engine is not None else "lazy"
+        if prewarm not in ("eager", "lazy"):
+            raise ValueError(f"prewarm must be 'eager' or 'lazy', got {prewarm!r}")
+        self.prewarm = prewarm
         self.capacity = capacity
         self.max_wait_s = max_wait_s
         self.with_eigvec = with_eigvec
-        # signature key -> ascending budget ladder (custom or derived)
+        # signature key -> ascending budget ladder (custom or derived);
+        # geometry is shared across tenants
         self._ladders: Dict[tuple, List[BucketBudget]] = {
             k: sorted(v) for k, v in (budgets or {}).items()
         }
 
     # ------------------------------------------------------------ admission
 
+    def _needs_eigvec(self, model: Optional[str]) -> bool:
+        if self.with_eigvec == "auto":
+            return self.executor.tenant(model).cfg.model == "dgn"
+        return bool(self.with_eigvec)
+
     def ladder_for(self, req: Request) -> Tuple[tuple, List[BucketBudget]]:
         """Map a request to its signature key and budget ladder.
 
-        The first time a signature appears, every rung is warmed untimed
-        (the engine tracks the cost in ``compile_seconds``), so no rung
-        ever compiles inside the measured stream.
+        Under eager prewarm, the first time a (tenant, signature) pair
+        appears every rung is warmed untimed (the executor tracks the cost
+        in ``compile_seconds``), so no rung ever compiles inside the
+        measured stream; under lazy prewarm, rungs warm on first flush
+        instead (still untimed).
         """
-        nb, eb = self.engine._bucket_for(req.n, req.e)
+        nb, eb = self.executor.bucket_for(req.n, req.e)
         key = (nb, eb)
         ladder = self._ladders.get(key)
         if ladder is None:
@@ -192,15 +238,20 @@ class StreamScheduler:
                 BucketBudget(n_pad=k * nb, e_pad=k * eb, g_pad=2 * k)
                 for k in sorted(ks)
             ]
-        self._warm_ladder(ladder, req)
+        if self.prewarm == "eager":
+            self._warm_ladder(ladder, req)
         return key, ladder
 
     def _warm_ladder(self, ladder: Sequence[BucketBudget], req: Request) -> None:
-        """Compile every rung of a ladder before it can appear in a timed
-        flush.  A minimal dummy graph (1 node, 1 self-edge, the stream's
-        feature dims) produces the exact padded trace signature."""
+        """Compile every rung of a ladder for this request's tenant before
+        it can appear in a timed flush.  A minimal dummy graph (1 node,
+        1 self-edge, the stream's feature dims) produces the exact padded
+        trace signature."""
+        model = req.model if req.model is not None else self._default_model
         if all(
-            ("packed", b.n_pad, b.e_pad, b.g_pad) in self.engine._compiled
+            self.executor.has_program(
+                ("packed", b.n_pad, b.e_pad, b.g_pad), b.g_pad, model=model
+            )
             for b in ladder
         ):
             return
@@ -209,28 +260,49 @@ class StreamScheduler:
         zero = np.zeros(1, np.int32)
         dummy = (zero, zero, np.zeros((1, feat), np.float32),
                  np.zeros((1, edge), np.float32))
+        need_eig = self._needs_eigvec(model)
+        tenant = self.executor.tenant(model)
         for budget in ladder:
-            packed, meta = pack_graphs([dummy], budget)
-            eig = pack_eigvecs([np.zeros(1, np.float32)], meta) if self.with_eigvec else None
-            self.engine.infer_packed(packed, budget, eigvec=eig, warm_only=True,
-                                     layout=self._plan(packed))
+            prep, _ = pack_prepared(
+                [dummy], budget,
+                eigvecs=[np.zeros(1, np.float32)] if need_eig else None,
+                with_layout=tenant.share_layout,
+            )
+            self.executor.warm(prep, model=model)
 
     # -------------------------------------------------------------- serving
 
-    def run(self, graphs: Sequence[tuple], qps: float = 0.0) -> StreamReport:
+    def run(self, graphs: Sequence[tuple], qps: float = 0.0,
+            models: Optional[Sequence[Optional[str]]] = None) -> StreamReport:
         """Serve a stream of raw COO graphs and account per-request latency.
 
         ``qps`` > 0 offers request i at virtual time i/qps; ``qps`` <= 0
         means the whole stream is already queued at t=0 (offline /
-        saturation mode).  Compute time is real measured engine time;
-        compile/warm time is excluded (tracked in the report).
+        saturation mode).  ``models`` tags request i with a tenant name;
+        ``None`` entries (or omitting ``models``) route to the sole
+        tenant and are rejected up front when several are registered.
+        Compute time is real measured engine time; compile/warm time is
+        excluded (tracked in the report).
         """
+        if models is not None and len(models) != len(graphs):
+            raise ValueError(
+                f"models ({len(models)}) must tag every graph ({len(graphs)})"
+            )
+        if (self._default_model is None and len(self.executor.tenants) > 1
+                and (models is None or any(m is None for m in models))):
+            raise ValueError(
+                "untagged requests are ambiguous on a multi-tenant executor: "
+                "pass models=[...] naming a registered tenant per graph "
+                f"(registered: {sorted(self.executor.tenants)})"
+            )
         requests = [
             Request(rid=i, graph=g[:4],
-                    arrival_s=(i / qps if qps > 0 else 0.0))
+                    arrival_s=(i / qps if qps > 0 else 0.0),
+                    model=(models[i] if models is not None
+                           else self._default_model))
             for i, g in enumerate(graphs)
         ]
-        compile_before = self.engine.compile_seconds
+        compile_before = self.executor.compile_seconds
 
         open_buckets: Dict[tuple, _OpenBucket] = {}
         outputs: List[Optional[np.ndarray]] = [None] * len(requests)
@@ -275,13 +347,15 @@ class StreamScheduler:
                 continue
             req = requests[idx]
             idx += 1
-            key, ladder = self.ladder_for(req)
+            sig, ladder = self.ladder_for(req)
+            key = (req.model, sig)
             bucket = open_buckets.get(key)
             if bucket is not None and not bucket.admits(req):
                 flush(key, req.arrival_s, "budget")
                 bucket = None
             if bucket is None:
-                bucket = _OpenBucket(ladder, req.arrival_s, self.max_wait_s)
+                bucket = _OpenBucket(ladder, req.arrival_s, self.max_wait_s,
+                                     model=req.model)
                 open_buckets[key] = bucket
             bucket.add(req)
             if bucket.full:
@@ -295,29 +369,29 @@ class StreamScheduler:
             compute_s=compute_s,
             makespan_s=max(last_done_s - (requests[0].arrival_s if requests else 0.0),
                            1e-12),
-            compile_s=self.engine.compile_seconds - compile_before,
+            compile_s=self.executor.compile_seconds - compile_before,
         )
 
     # ------------------------------------------------------------- internal
 
-    def _plan(self, packed):
-        """The batch's ``GraphLayout``, emitted host-side at pack time
-        (zero on-device sorts in the flush program); None when the engine
-        runs the per-call-sort parity path."""
-        return pack_layout(packed) if self.engine.share_layout else None
-
     def _execute(self, bucket: _OpenBucket) -> Tuple[List[np.ndarray], float]:
+        """Pack one open bucket on its smallest fitting rung and run it
+        through the executor for the bucket's tenant.  The pack-time
+        payload (padded graph, packed eigenvectors, host-built layout
+        plan) is one ``PreparedBatch`` — zero on-device sorts in the
+        flushed program."""
+        model = bucket.model
+        tenant = self.executor.tenant(model)
         raws = [r.graph for r in bucket.requests]
         rung = bucket.rung()
-        packed, meta = pack_graphs(raws, rung)
-        eig = None
-        if self.with_eigvec:
+        vecs = None
+        if self._needs_eigvec(model):
             vecs = [
-                np.asarray(self.engine._eigvec(s, r, nf.shape[0], nf.shape[0]))
+                np.asarray(self.executor._eigvec(s, r, nf.shape[0], nf.shape[0]))
                 for s, r, nf, _ in (g[:4] for g in raws)
             ]
-            eig = pack_eigvecs(vecs, meta)
-        out, dt = self.engine.infer_packed(packed, rung, eigvec=eig,
-                                           layout=self._plan(packed))
-        level = "graph" if self.engine.cfg.task == "graph" else "node"
+        prep, meta = pack_prepared(raws, rung, eigvecs=vecs,
+                                   with_layout=tenant.share_layout)
+        out, dt = self.executor.run(prep, model=model)
+        level = "graph" if tenant.cfg.task == "graph" else "node"
         return unpack_outputs(out, meta, level=level), dt

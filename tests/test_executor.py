@@ -1,0 +1,321 @@
+"""The Executor pipeline: facade parity, multi-tenant isolation, and the
+two compile-cache regressions the refactor fixes.
+
+* **Facade parity** — ``GNNEngine`` is a thin facade: for all six models
+  x stream/batched/packed x fp32/int8, driving a fresh ``Executor``
+  directly through the ``prepare_*`` family must produce *bitwise* the
+  same logits the engine's mode methods produce.
+* **Warm-signature regression** — the old ``infer_stream`` warmed on
+  ``("eig", with_eigvec)`` alone, so a mid-stream dtype change in the
+  same bucket recompiled inside the timed region.  The executor's one
+  signature function keys on every leaf's shape+dtype.
+* **num_graphs regression** — the old ``_bucket(key, num_graphs=...)``
+  silently kept the *first* call's ``num_graphs`` on a cache hit; the
+  executor makes it part of the cache key.
+* **Multi-tenant** — two tenants share one scheduler and one bucket
+  ladder without cross-contaminating compile caches or params; tenants
+  with the same architecture share compiled programs while keeping their
+  own parameters and warm bookkeeping.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.batching import BucketBudget, pack_eigvecs, pack_graphs, pack_layout
+from repro.gnn import init
+from repro.gnn.models import paper_config
+from repro.serve.executor import Executor, prepared, trace_signature
+from repro.serve.gnn_engine import GNNEngine
+from repro.serve.scheduler import StreamScheduler
+
+KEY = jax.random.PRNGKey(0)
+MODELS = [("gcn", False), ("gin", False), ("gin", True), ("gat", False),
+          ("pna", False), ("dgn", False)]
+
+
+def _reduced_config(model, vn=False, **kw):
+    base = dict(num_layers=2, virtual_node=vn)
+    if model == "gat":
+        base.update(heads=2, head_features=8)
+    elif model in ("pna", "dgn"):
+        base.update(hidden=16, head_hidden=(8,))
+    else:
+        base.update(hidden=16)
+    base.update(kw)
+    return paper_config(model, **base)
+
+
+def _raw_graphs(rng, k=4, feat=9, edge=3):
+    out = []
+    for _ in range(k):
+        n = int(rng.integers(5, 14))
+        e = int(rng.integers(n, 2 * n))
+        out.append((
+            rng.integers(0, n, e).astype(np.int32),
+            rng.integers(0, n, e).astype(np.int32),
+            rng.normal(size=(n, feat)).astype(np.float32),
+            rng.normal(size=(e, edge)).astype(np.float32),
+        ))
+    return out
+
+
+def _bitwise(a, b, msg):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=msg)
+
+
+# --------------------------------------------------------------- facade parity
+
+
+@pytest.mark.parametrize("model,vn", MODELS)
+@pytest.mark.parametrize("precision", ["fp32", "int8"])
+def test_engine_facade_bitwise_equals_direct_executor(model, vn, precision, rng):
+    """The engine's three mode paths, pinned via the facade, against the
+    same calls staged by hand on a fresh Executor."""
+    cfg = _reduced_config(model, vn)
+    params = init(KEY, cfg)
+    graphs = _raw_graphs(rng)
+    eig = model == "dgn"
+    eng = GNNEngine(cfg, params, buckets=((16, 32),), precision=precision)
+    ex = Executor(buckets=((16, 32),))
+    ex.register("m", cfg, params, precision=precision)
+
+    outs, _, _ = eng.infer_stream(graphs, with_eigvec=eig)
+    for i, g in enumerate(graphs):
+        got, _ = ex.run(ex.prepare_stream(g, with_eigvec=eig), model="m")
+        _bitwise(got[:1], outs[i], f"stream graph {i}")
+
+    b_eng, _ = eng.infer_batched(graphs, batch_size=2, n_pad=32, e_pad=64,
+                                 with_eigvec=eig)
+    b_ex = np.concatenate([
+        ex.run(ex.prepare_batched(graphs[i : i + 2], 2, 32, 64,
+                                  with_eigvec=eig), model="m")[0][:2]
+        for i in range(0, len(graphs), 2)
+    ])
+    _bitwise(b_ex, b_eng, "batched")
+
+    budget = BucketBudget(n_pad=64, e_pad=128, g_pad=len(graphs))
+    packed, meta = pack_graphs(graphs, budget)
+    eigv = None
+    if eig:
+        from repro.data.pipeline import laplacian_eigvec
+
+        eigv = pack_eigvecs(
+            [laplacian_eigvec(s, r, nf.shape[0]) for s, r, nf, _ in graphs],
+            meta,
+        )
+    p_eng, _ = eng.infer_packed(packed, budget, eigvec=eigv,
+                                layout=pack_layout(packed))
+    p_ex, _ = ex.run(ex.prepare_packed(packed, budget, eigvec=eigv,
+                                       layout=pack_layout(packed), model="m"),
+                     model="m")
+    _bitwise(p_ex, p_eng, "packed")
+
+
+# ------------------------------------------------------ warm-signature bug fix
+
+
+def test_trace_signature_keys_on_leaf_dtypes(rng):
+    from repro.core import graph as G
+
+    g = _raw_graphs(rng, 1)[0]
+    a = G.from_numpy(*g, n_pad=16, e_pad=32)
+    half = (g[0], g[1], g[2].astype(np.float16), g[3])
+    b = G.from_numpy(*half, n_pad=16, e_pad=32)
+    assert trace_signature(a) != trace_signature(b)
+    assert trace_signature(a) == trace_signature(a)
+
+
+def test_stream_dtype_change_warms_outside_timed_region(rng):
+    """Regression: a mid-stream dtype change in the same bucket is a new
+    trace signature and must be warmed untimed (the old stream signature
+    ``("eig", with_eigvec)`` let the recompile leak into the timed region)."""
+    cfg = _reduced_config("gin")
+    eng = GNNEngine(cfg, init(KEY, cfg), buckets=((16, 32),))
+    g = _raw_graphs(rng, 1)[0]
+    g_half = (g[0], g[1], g[2].astype(np.float16), g[3])
+
+    eng.infer_stream([g])
+    cb = eng._compiled[("stream", 16, 32)]
+    assert len(cb.warm) == 1
+    before = eng.compile_seconds
+    _, _, compile_s = eng.infer_stream([g_half])  # same bucket, new dtype
+    assert len(cb.warm) == 2, "dtype change must register a new warm signature"
+    assert compile_s > 0 and eng.compile_seconds > before, (
+        "the new signature's compile must be warmed (excluded from latency)"
+    )
+    # and once warm, neither signature compiles again
+    steady = eng.compile_seconds
+    eng.infer_stream([g, g_half])
+    assert eng.compile_seconds == steady
+
+
+# ------------------------------------------------------- num_graphs cache key
+
+
+def test_num_graphs_is_part_of_the_program_cache_key(rng):
+    """Regression: the old ``_bucket(key, num_graphs=...)`` kept the first
+    call's ``num_graphs`` on a cache hit, silently mis-sizing the pooled
+    buffers of every later caller."""
+    from repro.core import graph as G
+
+    cfg = _reduced_config("gin")
+    ex = Executor(buckets=((16, 32),))
+    ex.register("m", cfg, init(KEY, cfg))
+    gs = []
+    for _ in range(2):  # two tiny graphs that fit the (16, 32) batch pad
+        n, e = 5, 6
+        gs.append((rng.integers(0, n, e).astype(np.int32),
+                   rng.integers(0, n, e).astype(np.int32),
+                   rng.normal(size=(n, 9)).astype(np.float32),
+                   rng.normal(size=(e, 3)).astype(np.float32)))
+    g = G.batch_graphs(gs, n_pad=16, e_pad=32)
+    out1, _ = ex.run(prepared(g, None, None, ("bucket", 16, 32), 1), model="m")
+    out2, _ = ex.run(prepared(g, None, None, ("bucket", 16, 32), 2), model="m")
+    assert out1.shape == (1, cfg.out_dim)
+    assert out2.shape == (2, cfg.out_dim), (
+        "second num_graphs must not reuse the first call's program"
+    )
+    assert len(ex._compiled) == 2
+
+
+# ----------------------------------------------------------------- two tenants
+
+
+def test_two_tenants_one_scheduler_match_solo_runs(rng):
+    """gcn@int8 + gat@fp32 through ONE executor + ONE scheduler: outputs
+    bitwise-equal to each model's solo scheduler run, zero recompiles
+    after warmup, and no compile-cache cross-contamination."""
+    cfg_a, cfg_b = _reduced_config("gcn"), _reduced_config("gat")
+    params_a, params_b = init(KEY, cfg_a), init(jax.random.PRNGKey(1), cfg_b)
+    graphs = _raw_graphs(rng, 8)
+
+    ex = Executor(buckets=((16, 32),))
+    ex.register("gcn8", cfg_a, params_a, precision="int8")
+    ex.register("gat32", cfg_b, params_b)
+    sched = StreamScheduler(ex, capacity=2)
+    assert sched.prewarm == "lazy"
+    models = ["gcn8" if i % 2 == 0 else "gat32" for i in range(len(graphs))]
+    rep = sched.run(graphs, qps=0.0, models=models)
+
+    # zero recompiles on a repeat pass over the same mixed stream
+    warm = ex.compile_seconds
+    rep2 = sched.run(graphs, qps=0.0, models=models)
+    assert rep2.compile_s == 0.0 and ex.compile_seconds == warm
+
+    # per-tenant flush partitioning at saturation equals the solo runs
+    for name, cfg, params, precision in [
+        ("gcn8", cfg_a, params_a, "int8"), ("gat32", cfg_b, params_b, "fp32"),
+    ]:
+        solo = StreamScheduler(
+            GNNEngine(cfg, params, buckets=((16, 32),), precision=precision),
+            capacity=2,
+        )
+        srep = solo.run([g for g, m in zip(graphs, models) if m == name],
+                        qps=0.0)
+        mine = [o for o, m in zip(rep.outputs, models) if m == name]
+        for i, (a, b) in enumerate(zip(mine, srep.outputs)):
+            _bitwise(a, b, f"{name} graph {i}")
+
+    # caches don't cross tenants: every program key is one tenant's
+    keys_a = {k for k in ex._compiled if k[0] == ex.tenant("gcn8").program_key}
+    keys_b = {k for k in ex._compiled if k[0] == ex.tenant("gat32").program_key}
+    assert keys_a and keys_b and not (keys_a & keys_b)
+    assert keys_a | keys_b == set(ex._compiled)
+    assert ex.tenant("gcn8").params is not ex.tenant("gat32").params
+
+
+def test_same_architecture_tenants_share_programs_not_params(rng):
+    """Two tenants with equal (cfg, precision) — e.g. A/B weight variants —
+    share compiled programs (one cache entry per bucket) while serving
+    their own params: distinct outputs, correct per-tenant warm
+    bookkeeping."""
+    cfg = _reduced_config("gin")
+    ex = Executor(buckets=((16, 32),))
+    ex.register("a", cfg, init(KEY, cfg))
+    ex.register("b", cfg, init(jax.random.PRNGKey(7), cfg))
+    g = _raw_graphs(rng, 1)[0]
+
+    out_a, _ = ex.run(ex.prepare_stream(g), model="a")
+    n_programs = len(ex._compiled)
+    before = ex.compile_seconds
+    out_b, _ = ex.run(ex.prepare_stream(g), model="b")
+    assert len(ex._compiled) == n_programs, (
+        "same-architecture tenants must share the compiled program"
+    )
+    # tenant b's first run still warms (its params signature is its own
+    # warm key), and the outputs reflect b's params, not a's
+    assert ex.compile_seconds >= before
+    assert not np.array_equal(out_a, out_b)
+    # steady state: neither tenant compiles again
+    steady = ex.compile_seconds
+    ex.run(ex.prepare_stream(g), model="a")
+    ex.run(ex.prepare_stream(g), model="b")
+    assert ex.compile_seconds == steady
+
+
+def test_tenant_resolution_and_registration_errors(rng):
+    cfg = _reduced_config("gin")
+    ex = Executor()
+    ex.register("only", cfg, init(KEY, cfg))
+    assert ex.tenant() is ex.tenant("only")
+    with pytest.raises(ValueError, match="already registered"):
+        ex.register("only", cfg, init(KEY, cfg))
+    with pytest.raises(KeyError, match="no tenant"):
+        ex.tenant("missing")
+    ex.register("second", cfg, init(KEY, cfg))
+    with pytest.raises(KeyError, match="model name required"):
+        ex.tenant()
+
+
+def test_scheduler_rejects_mismatched_model_tags(rng):
+    cfg = _reduced_config("gin")
+    eng = GNNEngine(cfg, init(KEY, cfg), buckets=((16, 32),))
+    sched = StreamScheduler(eng, capacity=2)
+    with pytest.raises(ValueError, match="must tag every graph"):
+        sched.run(_raw_graphs(rng, 3), models=["default"])
+
+
+def test_scheduler_rejects_untagged_multitenant_stream_up_front(rng):
+    """Ambiguous routing must fail at run() entry, not mid-stream at the
+    first flush."""
+    cfg = _reduced_config("gin")
+    ex = Executor(buckets=((16, 32),))
+    ex.register("a", cfg, init(KEY, cfg))
+    ex.register("b", cfg, init(jax.random.PRNGKey(1), cfg))
+    sched = StreamScheduler(ex, capacity=2)
+    graphs = _raw_graphs(rng, 3)
+    with pytest.raises(ValueError, match="untagged requests are ambiguous"):
+        sched.run(graphs)
+    with pytest.raises(ValueError, match="untagged requests are ambiguous"):
+        sched.run(graphs, models=["a", None, "b"])
+
+
+def test_facade_rejects_engine_level_executor_config(rng):
+    """buckets/mesh/rules belong to the executor — passing them alongside
+    an existing executor must error, not be silently dropped."""
+    cfg = _reduced_config("gin")
+    params = init(KEY, cfg)
+    ex = Executor()
+    with pytest.raises(ValueError, match="belong to the executor"):
+        GNNEngine(cfg, params, buckets=((16, 32),), executor=ex)
+    GNNEngine(cfg, params, executor=ex)  # defaults are fine
+
+
+def test_facade_compile_seconds_is_per_tenant(rng):
+    """Two facades sharing one executor: each reports only its own
+    tenant's warm cost (and infer_stream's compile delta follows suit)."""
+    cfg_a, cfg_b = _reduced_config("gcn"), _reduced_config("gat")
+    ex = Executor(buckets=((16, 32),))
+    a = GNNEngine(cfg_a, init(KEY, cfg_a), executor=ex, name="a")
+    b = GNNEngine(cfg_b, init(jax.random.PRNGKey(1), cfg_b), executor=ex,
+                  name="b")
+    g = _raw_graphs(rng, 1)
+    _, _, compile_a = a.infer_stream(g)
+    assert compile_a > 0 and a.compile_seconds == pytest.approx(compile_a)
+    assert b.compile_seconds == 0.0, "b must not inherit a's warm cost"
+    _, _, compile_b = b.infer_stream(g)
+    assert compile_b > 0
+    assert a.compile_seconds == pytest.approx(compile_a), (
+        "b's warm must not move a's accounting"
+    )
+    assert ex.compile_seconds == pytest.approx(compile_a + compile_b)

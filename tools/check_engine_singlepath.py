@@ -1,0 +1,127 @@
+"""Guard: the serving stack has ONE timing/compile path — ``serve/executor.py``.
+
+The executor refactor's invariant is that ``time.perf_counter`` timing and
+``jax.jit`` program construction exist exactly once in the GNN serving
+stack (the executor's warm-before-timing path), so no serving mode can
+quietly grow its own compile cache or timed region again — the drift that
+produced the old mode x axis matrix, where every new axis had to be
+hand-threaded through ``infer_stream`` / ``infer_batched`` /
+``infer_packed`` separately.
+
+This checker walks every module under ``src/repro/serve/`` and fails on
+any *reference* (not just call — aliasing counts) to:
+
+  * ``time.perf_counter`` / ``perf_counter`` / ``time.monotonic`` — a
+    private timed region;
+  * ``jax.jit`` / bare ``jit`` (imported from jax) / ``pjit`` — a private
+    compile path;
+
+outside ``serve/executor.py``.  Exemptions:
+
+  * ``serve/executor.py`` itself — the one sanctioned path;
+  * ``serve/engine.py`` — the LM prefill/decode server, a separate
+    serving stack that predates the GNN executor and shares none of its
+    bucket machinery (tracked as its own surface, not a GNN mode).
+
+Exit code 1 with a per-reference report when anything times or compiles
+out of bounds.
+
+  python tools/check_engine_singlepath.py
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SERVE = ROOT / "src" / "repro" / "serve"
+ALLOWED = "executor.py"  # the one timing/compile path
+EXEMPT = {"engine.py"}  # the LM server: a separate, pre-executor stack
+TIMING_ATTRS = {"perf_counter", "monotonic"}  # of the time module
+TIMING_NAMES = {"perf_counter", "monotonic"}  # `from time import ...`
+COMPILE_ATTRS = {"jit", "pjit"}  # of the jax module chain
+COMPILE_NAMES = {"jit", "pjit"}  # bare `from jax import jit`
+TIMING_MODULES = {"time"}
+COMPILE_MODULES = {"jax", "jax.experimental.pjit"}
+
+
+def _attr_root(node: ast.AST):
+    """Leftmost Name of a dotted attribute chain (``jax.lax.sort`` -> jax)."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _bound_names(tree: ast.AST):
+    """(timing-module aliases, compile-module aliases, from-imported names)
+    — ``import time as t`` / ``import jax as j`` alias the module itself,
+    so attribute checks must resolve through the alias too; from-imports
+    map the bound name back to its origin (``as`` renames count)."""
+    time_mods, jax_mods, names = set(), set(), {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                bound = alias.asname or alias.name.split(".")[0]
+                if alias.name in TIMING_MODULES or alias.name.split(".")[0] in TIMING_MODULES:
+                    time_mods.add(bound)
+                if alias.name.split(".")[0] == "jax":
+                    jax_mods.add(bound)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module in TIMING_MODULES | COMPILE_MODULES:
+                for alias in node.names:
+                    names[alias.asname or alias.name] = alias.name
+    return time_mods, jax_mods, names
+
+
+def check_module(path: Path) -> list[str]:
+    try:
+        rel = path.relative_to(ROOT)
+    except ValueError:  # e.g. a tmp file under test
+        rel = path
+    try:
+        tree = ast.parse(path.read_text(), filename=str(rel))
+    except SyntaxError as err:  # pragma: no cover - tier-1 would fail first
+        return [f"{rel}: unparsable ({err})"]
+    time_mods, jax_mods, from_names = _bound_names(tree)
+    errors = []
+    for node in ast.walk(tree):
+        bad = None
+        if isinstance(node, ast.Attribute):
+            root = _attr_root(node)
+            if node.attr in TIMING_ATTRS and root in time_mods:
+                bad = f"time.{node.attr} timing"
+            elif node.attr in COMPILE_ATTRS and root in jax_mods:
+                bad = f"jax.{node.attr} program construction"
+        elif isinstance(node, ast.Name):
+            origin = from_names.get(node.id)
+            if origin in TIMING_NAMES:
+                bad = f"{origin} timing"
+            elif origin in COMPILE_NAMES:
+                bad = f"{origin} program construction"
+        if bad is not None:
+            errors.append(
+                f"{rel}:{node.lineno}: {bad} outside serve/executor.py "
+                f"— route through the Executor's warm/run pipeline instead"
+            )
+    return errors
+
+
+def main() -> int:
+    errors = []
+    checked = 0
+    for path in sorted(SERVE.glob("*.py")):
+        if path.name == ALLOWED or path.name in EXEMPT:
+            continue
+        checked += 1
+        errors.extend(check_module(path))
+    for e in errors:
+        print(f"ERROR: {e}")
+    if not errors:
+        print(f"engine-singlepath check OK ({checked} serve/ modules share "
+              f"the executor's one timing/compile path)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
