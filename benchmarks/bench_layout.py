@@ -27,11 +27,34 @@ Also asserted: a second scheduler pass over a packed stream adds zero
 compile seconds — the plan rides the existing bucket signature, so
 layout threading introduces no recompiles.
 
-  PYTHONPATH=src python benchmarks/bench_layout.py [--smoke]
+  PYTHONPATH=src python benchmarks/bench_layout.py [--smoke] [--fused]
 
 ``--smoke`` (CI) keeps every deterministic assertion (sort counts, zero
 recompiles) and skips the wall-clock sweep — timing asserts on a loaded
 CI box are flakes, the committed full-run artifact is the perf claim.
+
+``--fused`` measures the megakernel lowering instead (the PR on top of
+the plan: one (phi, A, gamma) pass per layer, ``kernels/fused_mp.py``):
+
+  * deterministic — fused == unfused **bitwise** in fp32 per model, the
+    fused preplanned jaxpr still has zero sorts, and fused traffic adds
+    zero recompiles after warmup (it rides the same bucket signatures);
+  * wall-clock (full run) — interleaved min-of-k fused vs unfused on the
+    preplanned large graph; asserted **on TPU backends**: fused is not
+    slower on at least ``FUSED_MIN_WINS`` of the six models (GAT opts
+    out — its ratio is pure noise around 1.0 — and at molecule scale
+    dispatch noise swamps the fusion win, hence a wins-count not a
+    per-model floor).  Off-TPU the ratios are recorded as evidence,
+    like the int8 gate below: on CPU ``mode="auto"`` runs the fused
+    *reference* — the same XLA ops restructured, no VMEM residency —
+    so the measured ratios hover at 0.94–1.05x and a CPU wins-gate
+    would pin this box's process noise, not the kernel design;
+  * int8 — fused-int8 vs unfused-fp32 ratio for GCN/GIN, asserted
+    >= 1.0 **only on TPU backends**: XLA's CPU int8 dot is several times
+    slower than its f32 GEMM (no VNNI/AMX path here), so off-TPU the
+    ratio is recorded as evidence, not gated — the W8A8 win is a claim
+    about the MXU, and pretending otherwise would just pin a number
+    about this container's BLAS.
 """
 from __future__ import annotations
 
@@ -63,6 +86,13 @@ SORT_HEAVY = ("gat", "pna", "dgn")
 LARGE_N, LARGE_E = 8192, 32768
 TIMING_REPS = 15
 EVAL_SEED = 7
+
+# --fused gates (see module doc): fused must not lose on this many of the
+# six models at large-graph scale; both timing gates are TPU-only — on
+# CPU the fused path is the reference restructuring, so the ratios are
+# recorded as evidence, not asserted
+FUSED_MIN_WINS = 3
+FUSED_INT8_MODELS = ("gcn", "gin")
 
 
 # ----------------------------------------------------------- sort counting
@@ -110,8 +140,7 @@ def sort_counts(cfg, params, g, eig):
 # ----------------------------------------------------------------- timing
 
 
-def large_graph_win(cfg, params, with_eigvec, reps=TIMING_REPS):
-    """Interleaved min-of-k seed vs preplanned on one large graph."""
+def _large_graph(with_eigvec):
     rng = np.random.default_rng(0)
     n, e = LARGE_N, LARGE_E
     g = batch_graphs(
@@ -123,22 +152,76 @@ def large_graph_win(cfg, params, with_eigvec, reps=TIMING_REPS):
     )
     eig = (jnp.asarray(rng.normal(size=(n + 1,)), jnp.float32)
            if with_eigvec else None)
+    return g, eig
+
+
+def _interleaved_ms(fn_a, fn_b, reps):
+    """min-of-k over strictly interleaved calls — the only timing that
+    survives this box's ~20% process-level noise.  -> (ms_a, ms_b)."""
+    jax.block_until_ready(fn_a())
+    jax.block_until_ready(fn_b())
+    ta, tb = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        tb.append(time.perf_counter() - t0)
+    return min(ta) * 1e3, min(tb) * 1e3
+
+
+def large_graph_win(cfg, params, with_eigvec, reps=TIMING_REPS):
+    """Interleaved min-of-k seed vs preplanned on one large graph."""
+    g, eig = _large_graph(with_eigvec)
     seed_fn = jax.jit(
         lambda p, gg, ee: apply(p, gg, cfg, eigvec=ee, share_layout=False))
     plan_fn = jax.jit(
         lambda p, gg, ee, l: apply(p, gg, cfg, eigvec=ee, layout=l))
     lay = jax.tree.map(jnp.asarray, LY.host_layout(g))
-    jax.block_until_ready(seed_fn(params, g, eig))
-    jax.block_until_ready(plan_fn(params, g, eig, lay))
-    ts, tp = [], []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(seed_fn(params, g, eig))
-        ts.append(time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        jax.block_until_ready(plan_fn(params, g, eig, lay))
-        tp.append(time.perf_counter() - t0)
-    return min(ts) * 1e3, min(tp) * 1e3  # ms
+    return _interleaved_ms(
+        lambda: seed_fn(params, g, eig),
+        lambda: plan_fn(params, g, eig, lay),
+        reps,
+    )
+
+
+def fused_large_graph_win(cfg, params, with_eigvec, reps=TIMING_REPS):
+    """Interleaved min-of-k unfused vs fused, both preplanned (the PR-4
+    zero-sort path is the baseline the megakernel must beat)."""
+    g, eig = _large_graph(with_eigvec)
+    un_fn = jax.jit(
+        lambda p, gg, ee, l: apply(p, gg, cfg, eigvec=ee, layout=l))
+    fu_fn = jax.jit(
+        lambda p, gg, ee, l: apply(p, gg, cfg, eigvec=ee, layout=l,
+                                   fused=True))
+    lay = jax.tree.map(jnp.asarray, LY.host_layout(g))
+    return _interleaved_ms(
+        lambda: un_fn(params, g, eig, lay),
+        lambda: fu_fn(params, g, eig, lay),
+        reps,
+    )
+
+
+def fused_int8_vs_fp32(cfg, params, with_eigvec, reps=TIMING_REPS):
+    """Interleaved min-of-k: unfused fp32 vs fused W8A8, both preplanned
+    — the in-kernel quantize/requant claim (gated on TPU only)."""
+    from repro.quant import apply as QA
+
+    qparams, _ = QA.quantize_model(params, cfg, (),
+                                   QA.precision_qconfig("int8"))
+    g, eig = _large_graph(with_eigvec)
+    fp_fn = jax.jit(
+        lambda p, gg, ee, l: apply(p, gg, cfg, eigvec=ee, layout=l))
+    q_fn = jax.jit(
+        lambda p, gg, ee, l: apply(p, gg, cfg, eigvec=ee, layout=l,
+                                   fused=True))
+    lay = jax.tree.map(jnp.asarray, LY.host_layout(g))
+    return _interleaved_ms(
+        lambda: fp_fn(params, g, eig, lay),
+        lambda: q_fn(qparams, g, eig, lay),
+        reps,
+    )
 
 
 def stream_latency_us(cfg, params, graphs, with_eigvec, share):
@@ -149,8 +232,8 @@ def stream_latency_us(cfg, params, graphs, with_eigvec, share):
     return float(np.mean(lats) * 1e6)
 
 
-def packed_recompile_s(cfg, params, graphs, with_eigvec):
-    eng = GNNEngine(cfg, params)
+def packed_recompile_s(cfg, params, graphs, with_eigvec, fused=False):
+    eng = GNNEngine(cfg, params, fused=fused)
     sched = StreamScheduler(eng, capacity=4, max_wait_s=0.002,
                             with_eigvec=with_eigvec)
     sched.run(graphs, qps=0.0)  # warm every ladder rung untimed
@@ -217,6 +300,80 @@ def run(n_graphs: int = 48, with_timing: bool = True, strict: bool = True):
     return rows
 
 
+def run_fused(n_graphs: int = 48, with_timing: bool = True,
+              strict: bool = True):
+    """The --fused shape: megakernel vs unfused, per model (module doc)."""
+    on_tpu = jax.default_backend() == "tpu"
+    rows, wins = [], 0
+    for name in GNN_MODELS:
+        cfg = get_gnn_config(name)
+        params = init(jax.random.PRNGKey(0), cfg)
+        graphs = [g[:4] for g in
+                  MoleculeStream(MOLHIV, seed=EVAL_SEED).take(n_graphs)]
+        with_eigvec = name == "dgn"
+
+        # deterministic: bitwise fp32 parity on a molecule-scale batch
+        s, r, nf, ef = graphs[0]
+        g0 = from_numpy(s, r, nf, ef, n_pad=32, e_pad=96)
+        eig = (jnp.asarray(laplacian_eigvec(s, r, nf.shape[0], 32))
+               if with_eigvec else None)
+        lay = LY.for_model(None, g0, cfg.model, avg_degree=cfg.avg_degree,
+                           eigvec=eig)
+        un = np.asarray(apply(params, g0, cfg, eigvec=eig, layout=lay))
+        fu = np.asarray(apply(params, g0, cfg, eigvec=eig, layout=lay,
+                              fused=True))
+        bitwise = bool((un == fu).all())
+        fused_sorts = count_jaxpr_sorts(jax.make_jaxpr(
+            lambda p, gg, e, l: apply(p, gg, cfg, eigvec=e, layout=l,
+                                      fused=True)
+        )(params, g0, eig, lay).jaxpr)
+        recompile = packed_recompile_s(cfg, params, graphs, with_eigvec,
+                                       fused=True)
+        derived = {
+            "fp32_bitwise_vs_unfused": bitwise,
+            "jaxpr_preplanned_fused": fused_sorts,
+            "packed_recompile_s_after_warmup": round(recompile, 4),
+            "n_graphs": n_graphs,
+        }
+        ms_fused = 0.0
+        if with_timing:
+            ms_un, ms_fused = fused_large_graph_win(cfg, params, with_eigvec)
+            speedup = ms_un / max(ms_fused, 1e-9)
+            wins += speedup >= 1.0
+            derived["large_graph_ms_unfused"] = round(ms_un, 1)
+            derived["large_graph_ms_fused"] = round(ms_fused, 1)
+            derived["fused_speedup_x"] = round(speedup, 3)
+            if name in FUSED_INT8_MODELS:
+                ms_fp, ms_q = fused_int8_vs_fp32(cfg, params, with_eigvec)
+                ratio = ms_fp / max(ms_q, 1e-9)
+                derived["fused_int8_vs_fp32_x"] = round(ratio, 3)
+                if strict and on_tpu:
+                    assert ratio >= 1.0, (
+                        f"{name}: fused W8A8 slower than fp32 on TPU "
+                        f"({ratio:.3f}x)"
+                    )
+        rows.append({"name": f"fused_{name}",
+                     "us_per_call": round(ms_fused * 1e3, 1),
+                     "derived": derived})
+        print(f"fused_{name},{round(ms_fused * 1e3, 1)},{derived}",
+              flush=True)
+        ok = bitwise and fused_sorts == 0 and recompile == 0.0
+        if strict:
+            assert ok, f"{name}: fused acceptance failed ({derived})"
+        elif not ok:
+            print(f"# WARNING: {name} fused acceptance not met ({derived})")
+    if with_timing:
+        if strict and on_tpu:
+            assert wins >= FUSED_MIN_WINS, (
+                f"fused megakernel won on only {wins}/6 models at "
+                f"N={LARGE_N}/E={LARGE_E} (need >= {FUSED_MIN_WINS})"
+            )
+        elif not on_tpu:
+            print(f"# CPU backend: fused won {wins}/6 "
+                  f"(recorded, gated on TPU only — module doc)")
+    return rows
+
+
 # this bench writes its own BENCH json (below) so the assertion thresholds
 # travel with the rows; the benchmarks.run driver must not also write one
 WRITES_OWN_BENCH = True
@@ -224,11 +381,15 @@ WRITES_OWN_BENCH = True
 
 def main(strict: bool = False):
     smoke = "--smoke" in sys.argv
-    rows = run(n_graphs=8 if smoke else 48, with_timing=not smoke,
-               strict=strict or smoke)
+    fused = "--fused" in sys.argv
+    runner = run_fused if fused else run
+    rows = runner(n_graphs=8 if smoke else 48, with_timing=not smoke,
+                  strict=strict or smoke)
     # the smoke shape (CI) must not clobber the committed full-run artifact
-    write_bench_json("layout_smoke" if smoke else "layout", rows,
+    tag = "layout_fused" if fused else "layout"
+    write_bench_json(tag + ("_smoke" if smoke else ""), rows,
                      config={"argv": sys.argv[1:], "min_speedup": MIN_SPEEDUP,
+                             "fused_min_wins": FUSED_MIN_WINS,
                              "sort_heavy_models": list(SORT_HEAVY),
                              "large_graph": [LARGE_N, LARGE_E],
                              "timing_reps": TIMING_REPS,

@@ -25,10 +25,26 @@ the benchmarks.run driver):
                    sign agreement >= 99%, zero recompiles after warmup;
   int8-static:     finite outputs, MAE <= max(0.05, 15%), zero recompiles.
 
-  PYTHONPATH=src python benchmarks/bench_quant.py [--smoke]
+  PYTHONPATH=src python benchmarks/bench_quant.py [--smoke] [--fused]
 
 ``--smoke`` is the CI shape: fewer graphs, no fixed-mode engines, same
-assertions.
+correctness assertions (timing gates are full-run only, as in
+bench_multitenant: an 8-graph window is ~20% noisy on a shared box).
+
+``--fused`` serves the quantized tenants through the megakernel
+(``GNNEngine(fused=True)``: W8A8 quantize/accumulate/requant inside one
+(phi, A, gamma) pass) and adds two columns + two gates:
+
+  * ``int8_fused_gain_x`` — fused-int8 vs unfused-int8 throughput;
+    asserted >= ``FUSED_GAIN_FLOOR`` for the models whose gamma matmul
+    actually moves into the kernel (``GATE_FUSED_GAIN``; GCN's only
+    linear runs before aggregation so fusion changes little, GAT opts
+    out entirely, and PNA's four-aggregator scaler tower costs more
+    in-pass than CPU fusion saves — all three record-only);
+  * ``int8_speedup_x`` (already recorded) — asserted >= 1.0 **on TPU
+    backends only**: XLA's CPU int8 dot is several times slower than its
+    f32 GEMM, so off-TPU this column documents the backend, not the
+    design (the committed artifact records it either way).
 """
 from __future__ import annotations
 
@@ -55,18 +71,31 @@ SIGN_TOL = 0.99  # asserted for the dynamic path
 DECIDABLE_FRAC = 0.02  # |fp32 logit| >= this x mean |fp32 logit|
 CALIB_SEED, EVAL_SEED = 97, 2
 
+# --fused gates (see module doc).  PNA is record-only alongside GCN/GAT:
+# its gamma consumes four aggregations x three degree scalers, and at
+# molecule scale that extra in-pass work outweighs what fusing the final
+# matmul saves on CPU (measured ~0.5-0.6x; the TPU MXU path is where the
+# four-way reduction fuses profitably).
+GATE_FUSED_GAIN = ("gin", "gin_vn", "dgn")
+FUSED_GAIN_FLOOR = 1.0
+TIMED_REPS = 3  # best-of-k packed throughput; single reps are ~20% noisy
+
 
 def _packed_eval(engine, graphs, capacity, with_eigvec):
     """Serve ``graphs`` packed (saturation mode); returns (logits,
-    graphs_per_s, recompile_s_after_warmup)."""
+    graphs_per_s, recompile_s_after_warmup).  Throughput is best-of-
+    ``TIMED_REPS`` — min compute time is the only stable statistic on a
+    noisy box, and every rep must produce identical logits anyway."""
     sched = StreamScheduler(engine, capacity=capacity, max_wait_s=0.002,
                             with_eigvec=with_eigvec)
     sched.run(graphs, qps=0.0)  # warm every ladder rung untimed
     warm_s = engine.compile_seconds
-    rep = sched.run(graphs, qps=0.0)
-    logits = np.array([float(o[0, 0]) for o in rep.outputs])
-    return logits, rep.num_requests / rep.compute_s, \
-        engine.compile_seconds - warm_s
+    best_gps, logits = 0.0, None
+    for _ in range(TIMED_REPS):
+        rep = sched.run(graphs, qps=0.0)
+        best_gps = max(best_gps, rep.num_requests / rep.compute_s)
+        logits = np.array([float(o[0, 0]) for o in rep.outputs])
+    return logits, best_gps, engine.compile_seconds - warm_s
 
 
 def _compare(name, prec, logits, fp32_logits):
@@ -81,7 +110,9 @@ def _compare(name, prec, logits, fp32_logits):
 
 
 def run(n_calib: int = 16, n_eval: int = 48, capacity: int = 8,
-        with_fixed: bool = True, strict: bool = True):
+        with_fixed: bool = True, strict: bool = True, fused: bool = False,
+        gate_timing: bool = True):
+    on_tpu = jax.default_backend() == "tpu"
     calib = [g[:4] for g in MoleculeStream(MOLHIV, seed=CALIB_SEED).take(n_calib)]
     evalg = MoleculeStream(MOLHIV, seed=EVAL_SEED).take(n_eval)
     rows = []
@@ -90,10 +121,14 @@ def run(n_calib: int = 16, n_eval: int = 48, capacity: int = 8,
         params = init(jax.random.PRNGKey(0), cfg)
         engines = {
             "fp32": GNNEngine(cfg, params),
-            "int8": GNNEngine(cfg, params, precision="int8"),
+            "int8": GNNEngine(cfg, params, precision="int8", fused=fused),
             "int8-static": GNNEngine(cfg, params, precision="int8-static",
-                                     calib_graphs=calib),
+                                     calib_graphs=calib, fused=fused),
         }
+        if fused:
+            # the unfused-int8 twin the fused gain is measured against
+            engines["int8-unfused"] = GNNEngine(cfg, params,
+                                                precision="int8")
         if with_fixed:
             engines["fixed"] = GNNEngine(cfg, params, precision="fixed")
         logits, gps, recompile = {}, {}, {}
@@ -122,6 +157,12 @@ def run(n_calib: int = 16, n_eval: int = 48, capacity: int = 8,
             "fp32_linears": engines["int8"].quant_report.kept_fp32,
             "n_eval": n_eval,
         }
+        if fused:
+            derived["fused"] = True
+            derived["int8_unfused_graphs_per_s"] = round(gps["int8-unfused"], 1)
+            derived["int8_fused_gain_x"] = round(
+                gps["int8"] / gps["int8-unfused"], 2
+            )
         if with_fixed:
             derived["fixed16_mae"] = round(
                 float(np.abs(logits["fixed"] - logits["fp32"]).mean()), 5
@@ -145,6 +186,17 @@ def run(n_calib: int = 16, n_eval: int = 48, capacity: int = 8,
                 f"(tol {mae_tol_s:.4f}), "
                 f"recompile_s={recompile['int8-static']:.4f})"
             )
+            if fused and gate_timing and name in GATE_FUSED_GAIN:
+                gain = derived["int8_fused_gain_x"]
+                assert gain >= FUSED_GAIN_FLOOR, (
+                    f"{name}: fused int8 slower than unfused int8 "
+                    f"({gain:.2f}x < {FUSED_GAIN_FLOOR}x)"
+                )
+            if fused and gate_timing and on_tpu:
+                assert derived["int8_speedup_x"] >= 1.0, (
+                    f"{name}: fused int8 slower than fp32 on TPU "
+                    f"({derived['int8_speedup_x']:.2f}x)"
+                )
         elif not (ok_dyn and ok_static):
             print(f"# WARNING: {name} quant acceptance not met "
                   f"(mae={mae:.4f}, sign={sign:.3f}, static_mae={mae_s:.4f})")
@@ -159,20 +211,24 @@ WRITES_OWN_BENCH = True
 
 def main(strict: bool = False):
     smoke = "--smoke" in sys.argv
+    fused = "--fused" in sys.argv
     if smoke:
         rows = run(n_calib=4, n_eval=8, capacity=2, with_fixed=False,
-                   strict=strict)
+                   strict=strict, fused=fused, gate_timing=False)
     else:
-        rows = run(strict=strict)
+        rows = run(strict=strict, fused=fused)
     for row in rows:
         print(f"{row['name']},{row['int8_mae']},{row['derived']}")
     # the smoke shape (CI) must not clobber the committed full-run artifact
-    write_bench_json("quant_smoke" if smoke else "quant", rows,
+    tag = "quant_fused" if fused else "quant"
+    write_bench_json(tag + "_smoke" if smoke else tag, rows,
                      config={"argv": sys.argv[1:], "strict": strict,
                              "mae_rel_tol": MAE_REL_TOL,
                              "mae_abs_floor": MAE_ABS_FLOOR,
                              "sign_tol": SIGN_TOL,
-                             "decidable_frac": DECIDABLE_FRAC})
+                             "decidable_frac": DECIDABLE_FRAC,
+                             "gate_fused_gain": list(GATE_FUSED_GAIN),
+                             "fused_gain_floor": FUSED_GAIN_FLOOR})
     return rows
 
 

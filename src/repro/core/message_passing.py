@@ -35,7 +35,8 @@ gather, unlike padding edges which are write-only.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +44,7 @@ import jax.numpy as jnp
 from repro.core import layout as LY
 from repro.core import scatter_gather as sg
 from repro.core.graph import Graph, in_degree
+from repro.kernels import ops as kops
 
 # phi(x_src, x_dst, e) -> message  (edge-parallel)
 PhiFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
@@ -52,6 +54,66 @@ GammaFn = Callable[[jax.Array, jax.Array], jax.Array]
 AggregateFn = Callable[[Graph, jax.Array, Optional["LY.GraphLayout"]], jax.Array]
 
 AGGREGATORS = ("sum", "mean", "max", "min", "std", "var")
+
+# the megakernel's aggregator set: the accumulators it materializes in
+# VMEM scratch.  mean/std are *derived* in gamma from sum/sqsum and the
+# plan's cached in-degree, so they never need their own accumulator.
+FUSED_AGGREGATORS = ("sum", "sqsum", "max", "min", "wsum")
+FUSED_PHIS = ("copy", "add_relu")
+FUSED_GAMMAS = ("gcn", "gin", "pna", "dgn")
+FUSED_PRECISIONS = ("fp32", "int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class MPSpec:
+    """Declarative (phi, A, gamma) layer contract for the fused megakernel.
+
+    Where the closure form of :func:`mp_layer` *computes* phi and gamma,
+    an ``MPSpec`` *names* them — a hashable static the Pallas kernel
+    (``kernels/fused_mp.py``) compiles into one VMEM-resident pass:
+
+      phi:        "copy" (message = gathered source operand) or
+                  "add_relu" (GIN: relu(x_src + edge operand))
+      ops:        accumulator tuple, subset of ``FUSED_AGGREGATORS``;
+                  "wsum" weights each message by a per-edge operand
+                  (DGN's directional w_e) before summing
+      gamma:      node-update kind — "gcn" normalized self-loop add,
+                  "gin" 2-layer MLP, "pna" scaler tower + skip,
+                  "dgn" directional derivative + skip
+      precision:  "fp32", or "int8" to run gamma's first linear as an
+                  in-kernel W8A8 boundary (per-row dynamic quantize,
+                  int32 accumulate, fused requant — the
+                  ``quant.qconfig`` dynamic recipe, never leaving VMEM)
+
+    The runtime operands a spec needs (weights, per-node/per-edge
+    values) travel separately — see ``kernels/ref.fused_mp_ref`` for the
+    operand contract.  Models that cannot lower to this set (GAT's edge
+    softmax) keep the closure form and opt out of fusion.
+    """
+
+    phi: str = "copy"
+    ops: tuple = ("sum",)
+    gamma: str = "gcn"
+    precision: str = "fp32"
+
+    def __post_init__(self):
+        if self.phi not in FUSED_PHIS:
+            raise ValueError(f"unknown phi {self.phi!r}; expected {FUSED_PHIS}")
+        bad = [op for op in self.ops if op not in FUSED_AGGREGATORS]
+        if bad or not self.ops:
+            raise ValueError(
+                f"fused aggregators {self.ops!r} must be a non-empty subset "
+                f"of {FUSED_AGGREGATORS}"
+            )
+        if self.gamma not in FUSED_GAMMAS:
+            raise ValueError(
+                f"unknown gamma {self.gamma!r}; expected {FUSED_GAMMAS}"
+            )
+        if self.precision not in FUSED_PRECISIONS:
+            raise ValueError(
+                f"unknown precision {self.precision!r}; "
+                f"expected {FUSED_PRECISIONS}"
+            )
 
 
 def gather_scatter(
@@ -92,21 +154,45 @@ def gather_scatter(
 def mp_layer(
     graph: Graph,
     x: jax.Array,
-    phi: PhiFn,
-    gamma: GammaFn,
+    phi: Optional[PhiFn] = None,
+    gamma: Optional[GammaFn] = None,
     ops: Sequence[str] = ("sum",),
     edge_feat: jax.Array | None = None,
     layout: Optional[LY.GraphLayout] = None,
     aggregate: Optional[AggregateFn] = None,
+    spec: Optional[MPSpec] = None,
+    operands: Optional[Dict[str, jax.Array]] = None,
+    mode: str = "auto",
 ) -> jax.Array:
     """One full message-passing layer: scatter(phi) -> A -> gamma.
 
+    Two forms share this entry point:
+
+    * **closure form** (``phi``/``gamma`` callables): the unfused oracle
+      path — gather, transform, reduce, update as separate XLA ops.
+      ``aggregate`` overrides the default multi-op ``gather_scatter``
+      when a model's A(.) is richer than a concatenation of standard
+      reductions (PNA's scaled tower, DGN's directional derivative); it
+      receives the shared ``layout`` so custom aggregators also sort
+      zero times.
+    * **spec form** (``spec`` + ``operands``): the declarative contract,
+      dispatched to the fused megakernel (``kernels/ops.fused_mp``) —
+      the whole layer runs as one VMEM-resident pass over the plan.
+      Requires a ``layout``; ``operands`` follows
+      ``kernels/ref.fused_mp_ref`` (msrc/x_res/nop/eop/ew/w1/b1/...).
+
     ``x``: (N_pad, F) current node embeddings.  Returns (N_pad, F').
-    ``aggregate`` overrides the default multi-op ``gather_scatter`` when a
-    model's A(.) is richer than a concatenation of standard reductions
-    (PNA's scaled tower, DGN's directional derivative); it receives the
-    shared ``layout`` so custom aggregators also sort zero times.
     """
+    if spec is not None:
+        if layout is None:
+            raise ValueError(
+                "fused mp_layer (spec=...) requires a GraphLayout plan; "
+                "pass layout= or use the closure form"
+            )
+        return kops.fused_mp(
+            spec, layout.ids_sorted, layout.src_sorted, layout.in_degree,
+            graph.node_mask, mode=mode, **operands,
+        )
     e = graph.edge_feat if edge_feat is None else edge_feat
     x_src = jnp.take(x, graph.src, axis=0)
     x_dst = jnp.take(x, graph.dst, axis=0)
@@ -170,6 +256,79 @@ def pna_aggregate(
         scalers = pna_scalers(graph, avg_degree, degree=degree)
     out = agg[:, None, :] * scalers[:, :, None]  # (N, 3, 4F)
     return out.reshape(n, 3 * f4)
+
+
+# ---------------------------------------------------------------------------
+# GAT attention aggregation (paper §4.2) — the declared fusion opt-out
+# ---------------------------------------------------------------------------
+
+
+def gat_attention(
+    graph: Graph,
+    logits: jax.Array,
+    xp: jax.Array,
+    layout: Optional[LY.GraphLayout] = None,
+    mode: str = "auto",
+) -> jax.Array:
+    """GAT's A(.): per-destination softmax + attention-weighted sum.
+
+    ``logits``: (E, H) COO-order attention logits; ``xp``: (N, H, F)
+    projected per-head features.  Returns (N, H*F).  The softmax
+    normalizer couples every edge of a destination *before* any message
+    can be folded in, so this A(.) does not lower to the megakernel's
+    accumulator set — GAT is the documented ``MPSpec`` opt-out, and its
+    two segment kernels ride the shared plan here instead (zero sorts).
+    """
+    n = graph.num_nodes
+    perm, ids_sorted, src_sorted = LY.edge_plan(layout, graph)
+    alpha = kops.edge_softmax(
+        logits, ids_sorted, n, mode=mode, perm=perm
+    )  # (E, H) sorted
+    msg = jnp.take(xp, src_sorted, axis=0) * alpha[:, :, None]
+    h_f = xp.shape[1] * xp.shape[2]
+    return kops.segment_reduce(
+        msg.reshape(-1, h_f), ids_sorted, n, op="sum", mode=mode
+    )
+
+
+# ---------------------------------------------------------------------------
+# DGN directional aggregation (paper §4.4)
+# ---------------------------------------------------------------------------
+
+
+def dgn_directional_weights(graph: Graph, eigvec: jax.Array):
+    """-> (w_e (E,), wsum (N,)) directional weights from the eigenvector.
+
+    w_ij = (phi_j - phi_i) / sum_k |phi_k - phi_i| per in-edge, plus the
+    per-destination sum of weights.  The layout caches these
+    (``core.layout.with_dgn_weights``); this is the plan-less fallback,
+    bit-identical to the cached values.
+    """
+    dphi = jnp.take(eigvec, graph.src) - jnp.take(eigvec, graph.dst)  # (E,)
+    dphi = jnp.where(graph.edge_mask, dphi, 0.0)
+    denom = gather_scatter(graph, jnp.abs(dphi)[:, None], ops=("sum",))[:, 0]
+    w_e = dphi / jnp.maximum(jnp.take(denom, graph.dst), 1e-6)
+    wsum = gather_scatter(graph, w_e[:, None], ops=("sum",))[:, 0]
+    return w_e, wsum
+
+
+def dgn_aggregate(
+    graph: Graph,
+    messages: jax.Array,
+    w_e: jax.Array,
+    layout: Optional[LY.GraphLayout] = None,
+) -> jax.Array:
+    """DGN's A(.): [mean, w-weighted sum] -> (N, 2*F) concatenated.
+
+    ``w_e`` is the (E,) COO-order directional weight vector; both
+    reductions consume the one permuted message stream when a ``layout``
+    is threaded (zero sorts).
+    """
+    mean_agg = gather_scatter(graph, messages, ops=("mean",), layout=layout)
+    wx = gather_scatter(
+        graph, messages * w_e[:, None], ops=("sum",), layout=layout
+    )
+    return jnp.concatenate([mean_agg, wx], axis=-1)
 
 
 # ---------------------------------------------------------------------------

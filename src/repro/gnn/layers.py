@@ -39,6 +39,53 @@ def linear_apply(p, x: jax.Array, activation: str = "none", mode: str = "auto"):
     return ops.node_mlp(x, p["w"], p["b"], activation=activation, mode=mode)
 
 
+def fused_linear_operands(p):
+    """A linear layer's operand form for the fused megakernel, or ``None``.
+
+    The megakernel's gamma matmul supports exactly two parameterizations:
+    plain fp32 weights, and int8 *dynamic* W8A8 (per-row activation
+    scales computed inside the kernel — no calibration state).  Returns
+
+      {"kind": "fp32", "w", "b"}                      plain ``{"w","b"}``
+      {"kind": "int8", "w_q", "w_scale", "b"}         int8-dynamic
+
+    and ``None`` for everything else (int8-static needs calibrated
+    affine activation params, "fixed" needs grid snapping on both sides
+    — neither folds into the kernel's requant tail), which tells the
+    layer body to fall back to the unfused closure path even when the
+    engine asked for fusion.
+    """
+    if isinstance(p, qc.QuantizedLinear):
+        if p.scheme == "int8" and p.act_mode == "dynamic":
+            return {
+                "kind": "int8",
+                "w_q": p.w_q,
+                "w_scale": jnp.broadcast_to(
+                    jnp.asarray(p.w_scale, jnp.float32), (p.w_q.shape[1],)
+                ),
+                "b": p.b,
+            }
+        return None
+    return {"kind": "fp32", "w": p["w"], "b": p["b"]}
+
+
+def fused_dequant_weights(p):
+    """f32 ``(w, b)`` view of a linear layer, or ``None`` if not expressible.
+
+    Weight-only dequantization for the fused path's *auxiliary* linears
+    (GIN's tiny edge embedding, GIN's second MLP layer): re-quantizing
+    their activations inside the fused pass costs more than the matmuls
+    themselves, so int8-dynamic weights run as dequantized f32 there.
+    int8-static / "fixed" return ``None`` (same opt-out as
+    :func:`fused_linear_operands`).
+    """
+    if isinstance(p, qc.QuantizedLinear):
+        if p.scheme == "int8" and p.act_mode == "dynamic":
+            return qc.dequantize_int8(p.w_q, p.w_scale), p.b
+        return None
+    return p["w"], p["b"]
+
+
 def mlp_init(rng, sizes: Sequence[int]) -> list:
     """sizes = (d_in, h1, ..., d_out)."""
     keys = jax.random.split(rng, len(sizes) - 1)

@@ -22,6 +22,7 @@ from repro.core import graph as G
 from repro.core import layout as LY
 from repro.core import message_passing as mp
 from repro.gnn import layers as L
+from repro.kernels import ops as kops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,8 +111,28 @@ def init(rng: jax.Array, cfg: GNNConfig) -> dict:
 # ---------------------------------------------------------------------------
 # per-model layer bodies: each is a (phi, A, gamma) triple over the generic
 # ``mp.mp_layer`` dataflow, closed over the shared ``GraphLayout`` plan —
-# layer bodies never sort; graph-static values come off ``extras["layout"]``
+# layer bodies never sort (tools/check_no_raw_sort.py) and never call the
+# scatter machinery directly (tools/check_mp_spec.py): graph-static values
+# come off ``extras["layout"]`` and every reduction goes through
+# ``mp.mp_layer`` / the ``mp.*_aggregate`` helpers.
+#
+# When the engine asks for fusion (``extras["fused"]``) a body *declares*
+# its triple as an ``mp.MPSpec`` + operand dict instead of closures, and
+# the whole layer runs as one megakernel pass; bodies whose parameters
+# can't lower (int8-static / ap_fixed linears) silently keep the closure
+# form — same numerics, unfused — and GAT opts out structurally.
 # ---------------------------------------------------------------------------
+
+
+def _spec_precision(lin1):
+    return "int8" if lin1["kind"] == "int8" else "fp32"
+
+
+def _lin1_operands(lin1):
+    """fused_linear_operands dict -> the kernel's w1/b1/w1_scale triple."""
+    if lin1["kind"] == "int8":
+        return dict(w1=lin1["w_q"], b1=lin1["b"], w1_scale=lin1["w_scale"])
+    return dict(w1=lin1["w"], b1=lin1["b"])
 
 
 def _gcn_layer(g: G.Graph, x, lp, cfg, extras):
@@ -124,6 +145,16 @@ def _gcn_layer(g: G.Graph, x, lp, cfg, extras):
     xw = L.linear_apply(lp["lin"], x, mode=cfg.kernel_mode)
     xs = xw * inv_sqrt[:, None]
 
+    if extras.get("fused") and layout is not None:
+        # the linear runs *before* aggregation (W^T and the sum commute),
+        # so the fused pass is pure dataflow: gamma rescales and adds the
+        # normalized self-loop — any precision of lp["lin"] is eligible
+        spec = mp.MPSpec(phi="copy", ops=("sum",), gamma="gcn")
+        return mp.mp_layer(
+            g, xs, layout=layout, spec=spec, mode=cfg.kernel_mode,
+            operands=dict(msrc=xs, x_res=xs, nop=inv_sqrt[:, None]),
+        )
+
     def phi(x_src, x_dst, e):
         return x_src
 
@@ -135,6 +166,31 @@ def _gcn_layer(g: G.Graph, x, lp, cfg, extras):
 
 def _gin_layer(g: G.Graph, x, lp, cfg, extras):
     # phi(x, e) = relu(x_src + edge_embed)   (paper: x + eps*m with edge emb)
+    layout = extras["layout"]
+    if extras.get("fused") and layout is not None:
+        lin1 = L.fused_linear_operands(lp["mlp"][0])
+        edge_wb = L.fused_dequant_weights(lp["edge"])
+        lin2_wb = L.fused_dequant_weights(lp["mlp"][1])
+        if lin1 is not None and edge_wb is not None and lin2_wb is not None:
+            # edge features gather into plan order first, so the edge
+            # embedding lands pre-sorted as the kernel's phi operand
+            ef_sorted = jnp.take(g.edge_feat, layout.perm, axis=0)
+            e_emb = kops.node_mlp(
+                ef_sorted, edge_wb[0], edge_wb[1], activation="none",
+                mode=cfg.kernel_mode,
+            )
+            spec = mp.MPSpec(
+                phi="add_relu", ops=("sum",), gamma="gin",
+                precision=_spec_precision(lin1),
+            )
+            return mp.mp_layer(
+                g, x, layout=layout, spec=spec, mode=cfg.kernel_mode,
+                operands=dict(
+                    msrc=x, x_res=(1.0 + lp["eps"]) * x, eop=e_emb,
+                    w2=lin2_wb[0], b2=lin2_wb[1], **_lin1_operands(lin1),
+                ),
+            )
+
     e_emb = L.linear_apply(lp["edge"], g.edge_feat, mode=cfg.kernel_mode)
 
     def phi(x_src, x_dst, e):
@@ -146,16 +202,17 @@ def _gin_layer(g: G.Graph, x, lp, cfg, extras):
         )
 
     return mp.mp_layer(
-        g, x, phi, gamma, ops=("sum",), edge_feat=e_emb,
-        layout=extras["layout"],
+        g, x, phi, gamma, ops=("sum",), edge_feat=e_emb, layout=layout
     )
 
 
 def _gat_layer(g: G.Graph, x, lp, cfg, extras):
-    """GAT's A(.) is an edge softmax, not a plain reduction, so its triple
-    is spelled out over the same shared plan: phi produces per-edge logits
-    and messages, A normalizes per destination (both segment kernels ride
-    the plan's permutation), gamma is the elu tail."""
+    """GAT's A(.) is an edge softmax, not a plain reduction: the softmax
+    normalizer couples all of a destination's edges before any message can
+    fold in, so GAT is the declared ``MPSpec`` opt-out (it ignores
+    ``extras["fused"]``).  phi produces per-edge logits and messages and
+    ``mp.gat_attention`` normalizes + reduces over the shared plan;
+    gamma is the elu tail."""
     h, f = cfg.heads, cfg.head_features
     n = g.num_nodes
     xp = L.linear_apply(lp["proj"], x, mode=cfg.kernel_mode).reshape(n, h, f)
@@ -164,30 +221,42 @@ def _gat_layer(g: G.Graph, x, lp, cfg, extras):
     logits = jax.nn.leaky_relu(
         jnp.take(a_src, g.src, axis=0) + jnp.take(a_dst, g.dst, axis=0), 0.2
     )  # (E, H) in COO order
-    # destination-ordered (CSC) plan: shared across layers, or a private
-    # per-call sort when no layout is threaded (seed-parity path)
-    perm, ids_sorted, src_sorted = LY.edge_plan(extras["layout"], g)
-    from repro.kernels import ops as kops
-
-    alpha = kops.edge_softmax(
-        logits, ids_sorted, n, mode=cfg.kernel_mode, perm=perm
-    )  # (E, H) sorted
-    msg = jnp.take(xp, src_sorted, axis=0) * alpha[:, :, None]
-    agg = kops.segment_reduce(
-        msg.reshape(-1, h * f), ids_sorted, n, op="sum", mode=cfg.kernel_mode
+    agg = mp.gat_attention(
+        g, logits, xp, layout=extras["layout"], mode=cfg.kernel_mode
     )
     out = jax.nn.elu(agg)
     return jnp.where(g.node_mask[:, None], out, 0.0)
 
 
 def _pna_layer(g: G.Graph, x, lp, cfg, extras):
+    layout = extras["layout"]
     xp = L.linear_apply(lp["pre"], x, activation="relu", mode=cfg.kernel_mode)
+
+    if extras.get("fused") and layout is not None:
+        lin1 = L.fused_linear_operands(lp["post"])
+        if lin1 is not None:
+            if layout.pna_scalers is not None:
+                scalers = layout.pna_scalers
+            else:
+                scalers = mp.pna_scalers(
+                    g, cfg.avg_degree, degree=layout.in_degree
+                )
+            spec = mp.MPSpec(
+                phi="copy", ops=("sum", "sqsum", "max", "min"), gamma="pna",
+                precision=_spec_precision(lin1),
+            )
+            return mp.mp_layer(
+                g, xp, layout=layout, spec=spec, mode=cfg.kernel_mode,
+                operands=dict(
+                    msrc=xp, x_res=x, nop=scalers, **_lin1_operands(lin1)
+                ),
+            )
 
     def phi(x_src, x_dst, e):
         return x_src
 
-    def aggregate(graph, messages, layout):
-        return mp.pna_aggregate(graph, messages, cfg.avg_degree, layout=layout)
+    def aggregate(graph, messages, layout_):
+        return mp.pna_aggregate(graph, messages, cfg.avg_degree, layout=layout_)
 
     def gamma(xp_, tower):
         out = L.linear_apply(
@@ -195,9 +264,7 @@ def _pna_layer(g: G.Graph, x, lp, cfg, extras):
         )
         return out + x  # skip connection (§4.3) from the layer input
 
-    return mp.mp_layer(
-        g, xp, phi, gamma, aggregate=aggregate, layout=extras["layout"]
-    )
+    return mp.mp_layer(g, xp, phi, gamma, aggregate=aggregate, layout=layout)
 
 
 def _dgn_layer(g: G.Graph, x, lp, cfg, extras):
@@ -209,28 +276,37 @@ def _dgn_layer(g: G.Graph, x, lp, cfg, extras):
     The directional weights depend only on the graph and its eigenvector,
     so they live on the layout (computed once per forward, not per layer);
     the per-layer work is phi = x_src, A = [mean, w-weighted sum], and
-    gamma assembles the |.| derivative and the post-MLP + skip.
+    gamma assembles the |.| derivative and the post-MLP + skip.  Fused,
+    the weighted sum is the kernel's "wsum" accumulator over the plan-
+    ordered weights and the derivative assembles in the finalize tail.
     """
     layout = extras["layout"]
     if layout is not None and layout.dgn_w_e is not None:
         w_e, wsum = layout.dgn_w_e, layout.dgn_wsum
     else:
-        phi1 = extras["eigvec"]  # (N,) first non-trivial Laplacian eigvec
-        dphi = jnp.take(phi1, g.src) - jnp.take(phi1, g.dst)  # (E,)
-        dphi = jnp.where(g.edge_mask, dphi, 0.0)
-        denom = mp.gather_scatter(g, jnp.abs(dphi)[:, None], ops=("sum",))[:, 0]
-        w_e = dphi / jnp.maximum(jnp.take(denom, g.dst), 1e-6)
-        wsum = mp.gather_scatter(g, w_e[:, None], ops=("sum",))[:, 0]
+        w_e, wsum = mp.dgn_directional_weights(g, extras["eigvec"])
+
+    if extras.get("fused") and layout is not None:
+        lin1 = L.fused_linear_operands(lp["post"])
+        if lin1 is not None:
+            ew_sorted = jnp.take(w_e, layout.perm)[:, None]
+            spec = mp.MPSpec(
+                phi="copy", ops=("sum", "wsum"), gamma="dgn",
+                precision=_spec_precision(lin1),
+            )
+            return mp.mp_layer(
+                g, x, layout=layout, spec=spec, mode=cfg.kernel_mode,
+                operands=dict(
+                    msrc=x, x_res=x, nop=wsum[:, None], ew=ew_sorted,
+                    **_lin1_operands(lin1),
+                ),
+            )
 
     def phi(x_src, x_dst, e):
         return x_src
 
-    def aggregate(graph, x_src, layout_):
-        mean_agg = mp.gather_scatter(graph, x_src, ops=("mean",), layout=layout_)
-        wx = mp.gather_scatter(
-            graph, x_src * w_e[:, None], ops=("sum",), layout=layout_
-        )
-        return jnp.concatenate([mean_agg, wx], axis=-1)
+    def aggregate(graph, messages, layout_):
+        return mp.dgn_aggregate(graph, messages, w_e, layout=layout_)
 
     def gamma(x_, agg):
         d = x_.shape[-1]
@@ -262,6 +338,7 @@ def apply(
     num_graphs: Optional[int] = None,
     layout: Optional[LY.GraphLayout] = None,
     share_layout: bool = True,
+    fused: bool = False,
 ) -> jax.Array:
     """Forward pass.  Returns (num_graphs, out_dim) for graph tasks or
     (N_pad, out_dim) for node tasks.  ``eigvec`` is DGN's precomputed
@@ -278,6 +355,14 @@ def apply(
     every layer).  ``share_layout=False`` disables the plan entirely and
     reverts to the seed per-call-sort path — kept for the bitwise parity
     tests and the A/B sort-count benchmark, never for serving.
+
+    ``fused`` lowers each layer body to its declarative ``mp.MPSpec`` and
+    runs the whole (phi, A, gamma) pass through the fused megakernel
+    (``kernels/fused_mp.py`` / its oracle) instead of separate gather /
+    reduce / update ops.  Requires ``share_layout``; GAT and layers whose
+    quantized parameters can't lower (int8-static, ap_fixed) keep the
+    closure path automatically.  Off by default: the unfused path is the
+    parity oracle, exactly as the per-call-sort path is for layouts.
     """
     m = g.num_nodes if num_graphs is None else num_graphs
     layer_fn = _LAYERS[cfg.model]
@@ -287,7 +372,7 @@ def apply(
         )
     else:
         layout = None
-    extras = {"eigvec": eigvec, "layout": layout}
+    extras = {"eigvec": eigvec, "layout": layout, "fused": fused}
     x = L.linear_apply(params["encoder"], g.node_feat, mode=cfg.kernel_mode)
     x = jnp.where(g.node_mask[:, None], x, 0.0)
     vn = None  # (m, w) per-graph virtual-node state
@@ -317,6 +402,7 @@ def forward_program(
     cfg: GNNConfig,
     num_graphs: Optional[int] = None,
     share_layout: bool = True,
+    fused: bool = False,
 ) -> Callable:
     """The engine-facing program: :func:`apply` with its statics bound.
 
@@ -324,11 +410,13 @@ def forward_program(
     the positional shape every compiled serving program shares.  Built
     exactly once per compile-cache entry by ``serve.executor.Executor``
     (the only module that may wrap it in ``jax.jit``; see
-    ``tools/check_engine_singlepath.py``).
+    ``tools/check_engine_singlepath.py``).  ``fused`` is a program-level
+    static like ``share_layout``: it changes which ops the program lowers
+    to, never the positional signature.
     """
 
     def program(params, g: G.Graph, eigvec, layout):
         return apply(params, g, cfg, eigvec=eigvec, num_graphs=num_graphs,
-                     layout=layout, share_layout=share_layout)
+                     layout=layout, share_layout=share_layout, fused=fused)
 
     return program

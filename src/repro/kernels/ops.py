@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.edge_softmax import edge_softmax as _edge_softmax_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.fused_mp import fused_mp as _fused_mp_kernel
 from repro.kernels.node_mlp import node_mlp as _node_mlp_kernel
 from repro.kernels.quant_mlp import quant_node_mlp as _quant_mlp_kernel
 from repro.kernels.segment_reduce import segment_reduce_sorted as _segment_kernel
@@ -88,6 +89,63 @@ def segment_reduce(
         count = _segment_kernel(ones, segment_ids, num_segments, "sum", interpret=interpret)
         out = jnp.where(count > 0, out, 0.0)
     return out.astype(values.dtype)
+
+
+# the fused megakernel holds the whole (N, F) source table plus gamma's
+# weights resident in VMEM; above this footprint compiled dispatch falls
+# back to the reference path rather than overflow on-chip memory
+# (interpret mode — the CPU test path — is exempt: no real VMEM there)
+_FUSED_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def fused_mp(
+    spec,
+    ids_sorted: jax.Array,
+    src_sorted: jax.Array,
+    in_degree: jax.Array,
+    node_mask: jax.Array,
+    msrc: jax.Array,
+    x_res: jax.Array,
+    nop: jax.Array | None = None,
+    eop: jax.Array | None = None,
+    ew: jax.Array | None = None,
+    w1: jax.Array | None = None,
+    b1: jax.Array | None = None,
+    w1_scale: jax.Array | None = None,
+    w2: jax.Array | None = None,
+    b2: jax.Array | None = None,
+    mode: str = "auto",
+    block_e: int = 256,
+    block_n: int = 128,
+) -> jax.Array:
+    """One fused (phi, A, gamma) message-passing layer — the megakernel.
+
+    ``spec`` is a ``core.message_passing.MPSpec``; array operands follow
+    :func:`ref.fused_mp_ref` (the oracle, also the CPU production path:
+    its jnp lowering keeps the gather -> phi -> reduce -> gamma chain in
+    one jit scope, which is how the fused speedups in BENCH_layout.json
+    are realized off-TPU).  Per-edge operands arrive in plan order; the
+    plan's out-of-range padding ids do the masking.
+    """
+    use_kernel, interpret = _resolve(mode)
+    if use_kernel and not interpret:
+        resident = msrc.size * 4
+        for wgt in (w1, w2):
+            if wgt is not None:
+                resident += wgt.size * 4
+        if resident > _FUSED_VMEM_BUDGET:
+            use_kernel = False  # documented fallback: docs/KERNELS.md
+    if not use_kernel:
+        return ref.fused_mp_ref(
+            spec, ids_sorted, src_sorted, in_degree, node_mask, msrc, x_res,
+            nop=nop, eop=eop, ew=ew, w1=w1, b1=b1, w1_scale=w1_scale,
+            w2=w2, b2=b2,
+        )
+    return _fused_mp_kernel(
+        spec, ids_sorted, src_sorted, in_degree, node_mask, msrc, x_res,
+        nop=nop, eop=eop, ew=ew, w1=w1, b1=b1, w1_scale=w1_scale,
+        w2=w2, b2=b2, block_e=block_e, block_n=block_n, interpret=interpret,
+    )
 
 
 def node_mlp(

@@ -70,7 +70,7 @@ def serve_gnn_multitenant(args):
         if precision == "int8-static":
             calib = [g[:4] for g in MoleculeStream(MOLHIV, seed=97).take(16)]
         ex.register(spec, cfg, params, precision=precision, calib_graphs=calib,
-                    share_layout=not args.no_share_layout)
+                    share_layout=not args.no_share_layout, fused=args.fused)
         specs.append(spec)
     sched = StreamScheduler(ex, capacity=args.pack,
                             max_wait_s=args.max_wait_ms * 1e-3,
@@ -109,7 +109,8 @@ def serve_gnn(args):
         calib = [g[:4] for g in MoleculeStream(MOLHIV, seed=97).take(16)]
     eng = GNNEngine(cfg, params, mesh=mesh, precision=args.precision,
                     calib_graphs=calib,
-                    share_layout=not args.no_share_layout)
+                    share_layout=not args.no_share_layout,
+                    fused=args.fused)
     if eng.quant_report is not None:
         r = eng.quant_report
         print(f"[quant] {args.precision}: {r.quantized} linears quantized, "
@@ -182,6 +183,12 @@ def main():
                     help="stream: packed budget = this many base buckets")
     ap.add_argument("--gnn-mesh", type=int, default=1,
                     help="GNN: shard node/edge rows over this many devices")
+    ap.add_argument("--fused", action="store_true",
+                    help="GNN: lower eligible layers through the fused "
+                         "(phi, A, gamma) megakernel — one pass for "
+                         "message transform, aggregation, and node update "
+                         "(GAT and int8-static/fixed params keep the "
+                         "unfused path; see docs/KERNELS.md)")
     ap.add_argument("--no-share-layout", action="store_true",
                     help="GNN: disable the shared GraphLayout plan and "
                          "re-sort edges inside every aggregation (the "

@@ -12,6 +12,15 @@ makes one transform cover all six GNN models and every serving mode.
 
     qparams, report = quantize_model(params, cfg, calib_graphs)
     out = models.apply(qparams, graph, cfg)          # runs int8
+
+The same transformed tree also drives the fused megakernel: under
+``models.apply(..., fused=True)`` each layer body probes its
+``QuantizedLinear`` nodes through ``gnn.layers.fused_linear_operands`` —
+int8-dynamic trees lower their gamma matmul *into*
+``kernels.ops.fused_mp`` (quantize -> int8 MXU accumulate -> requant in
+the kernel tail), while int8-static and "fixed" trees return ``None``
+there and keep the unfused path.  Nothing in this module branches on
+fusion: one transform, both lowerings.
 """
 from __future__ import annotations
 

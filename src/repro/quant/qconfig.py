@@ -134,6 +134,12 @@ jax.tree_util.register_pytree_node(
 # scheme arithmetic
 # ---------------------------------------------------------------------------
 
+# Also the int8-dynamic contract for the fused megakernel: when a
+# QuantizedLinear lowers into ``kernels.ops.fused_mp`` (via
+# ``gnn.layers.fused_linear_operands``) the kernel re-implements the
+# dynamic recipe below — ``rs = max(rowmax|x|, _EPS) / 127`` — inside its
+# gamma tail, so ``kernels/ref._ROW_EPS`` and ``kernels/fused_mp._ROW_EPS``
+# must equal this constant (tests/test_fused_mp.py pins the three).
 _EPS = 1e-8
 
 

@@ -8,9 +8,9 @@ One import surface for everything mesh/sharding related:
   * ``partitioning`` — logical-axis rules, PartitionSpec resolution,
                        logical_constraint, sharded message passing
 
-The old ``repro.sharding``, ``repro.launch.mesh`` and the collective
-helpers of ``repro.core.distributed`` are deprecation shims over this
-package.
+This package is the sole home of mesh/sharding logic; the pre-runtime
+import paths (``repro.sharding``, ``repro.launch.mesh``,
+``repro.core.distributed``) are gone.
 """
 from repro.runtime import compat, mesh, partitioning
 from repro.runtime.compat import (

@@ -151,6 +151,7 @@ class Tenant:
     params: dict
     precision: str = "fp32"
     share_layout: bool = True
+    fused: bool = False
     quant_report: Optional[object] = None
     params_sig: tuple = ()
 
@@ -158,8 +159,8 @@ class Tenant:
     def program_key(self) -> tuple:
         """Compiled programs are shared between tenants with equal keys:
         the computation depends on (cfg, precision-structure, layout
-        sharing), never on the parameter *values*."""
-        return (self.cfg, self.precision, self.share_layout)
+        sharing, megakernel fusion), never on the parameter *values*."""
+        return (self.cfg, self.precision, self.share_layout, self.fused)
 
 
 # ---------------------------------------------------------------------------
@@ -202,12 +203,19 @@ class Executor:
         calib_graphs: Optional[Sequence[tuple]] = None,
         qconfig=None,
         share_layout: bool = True,
+        fused: bool = False,
     ) -> Tenant:
         """Admit a model into the shared machinery.  ``precision`` selects
         the serving arithmetic ("fp32", "int8", "int8-static", "fixed");
         quantization happens once here and every mode then serves the
-        transformed tree.  Tenants with an equal ``program_key`` share
-        compiled programs; params and warm state never cross tenants."""
+        transformed tree.  ``fused`` lowers eligible layers through the
+        ``kernels.ops.fused_mp`` megakernel (requires a layout plan —
+        layers without one, and opt-outs like GAT, keep the unfused path).
+        Like ``share_layout`` it is program-level static: part of
+        ``program_key``, never of the bucket/warm signatures, so flipping
+        it adds programs but never recompiles inside a timed region.
+        Tenants with an equal ``program_key`` share compiled programs;
+        params and warm state never cross tenants."""
         if name in self.tenants:
             raise ValueError(f"tenant {name!r} already registered")
         quant_report = None
@@ -226,7 +234,8 @@ class Executor:
             )
         tenant = Tenant(
             name=name, cfg=cfg, params=params, precision=precision,
-            share_layout=share_layout, quant_report=quant_report,
+            share_layout=share_layout, fused=fused,
+            quant_report=quant_report,
             params_sig=params_signature(params),
         )
         self.tenants[name] = tenant
@@ -316,7 +325,7 @@ class Executor:
         if cb is None:
             program = M.forward_program(
                 tenant.cfg, num_graphs=num_graphs,
-                share_layout=tenant.share_layout,
+                share_layout=tenant.share_layout, fused=tenant.fused,
             )
 
             @jax.jit

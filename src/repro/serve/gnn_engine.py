@@ -48,6 +48,7 @@ class GNNEngine:
         calib_graphs: Optional[Sequence[tuple]] = None,
         qconfig=None,
         share_layout: bool = True,
+        fused: bool = False,
         executor: Optional[Executor] = None,
         name: str = "default",
     ):
@@ -63,6 +64,12 @@ class GNNEngine:
         ``share_layout`` (default on) threads one ``GraphLayout`` plan per
         forward through every model layer; off = the seed per-call-sort
         path, retained only for parity tests and A/B benchmarks.
+
+        ``fused`` (default off) lowers eligible layers through the
+        ``kernels.ops.fused_mp`` megakernel — one pass for message
+        transform, aggregation, and node update.  Requires
+        ``share_layout``; layers that cannot fuse (GAT, int8-static /
+        "fixed" params) silently keep the unfused path (docs/KERNELS.md).
 
         ``executor`` attaches this engine as tenant ``name`` on an
         existing :class:`Executor` (sharing its bucket ladder and compile
@@ -84,7 +91,7 @@ class GNNEngine:
         self._tenant = self.executor.register(
             name, cfg, params, precision=precision,
             calib_graphs=calib_graphs, qconfig=qconfig,
-            share_layout=share_layout,
+            share_layout=share_layout, fused=fused,
         )
         self.cfg = cfg
 
@@ -106,6 +113,10 @@ class GNNEngine:
     @property
     def share_layout(self) -> bool:
         return self._tenant.share_layout
+
+    @property
+    def fused(self) -> bool:
+        return self._tenant.fused
 
     @property
     def quant_report(self):

@@ -93,9 +93,7 @@ def test_sharded_message_passing_and_compressed_psum():
 
 
 def test_sharding_rules_divisibility_fallback():
-    # imported via the deprecation shim on purpose: external `repro.sharding`
-    # imports must keep resolving to runtime.partitioning
-    from repro import sharding as SH
+    from repro.runtime import partitioning as SH
 
     # simulate a 16-way axis via a fake mesh-shape mapping by checking the
     # pure resolver logic
@@ -122,7 +120,7 @@ def test_sharding_rules_divisibility_fallback():
 
 
 def test_batch_rules_seq_sharding_for_small_batch():
-    from repro import sharding as SH
+    from repro.runtime import partitioning as SH
 
     class FakeMesh:
         shape = {"data": 16, "model": 16}

@@ -1,0 +1,54 @@
+"""Contract hygiene: the mp-spec guard passes on the real tree and
+actually catches violations (so the CI step can't silently no-op)."""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_mp_spec as cms  # noqa: E402
+
+
+def test_gnn_models_speak_the_contract():
+    assert cms.main() == 0
+
+
+def test_guard_flags_primitive_calls(tmp_path):
+    bad = tmp_path / "rogue_model.py"
+    bad.write_text(
+        "from repro.core.message_passing import gather_scatter\n"
+        "from repro.kernels import ops as kops\n"
+        "import jax\n"
+        "def layer(g, msg, lay):\n"
+        "    a = gather_scatter(g, msg)            # bare-name import\n"
+        "    b = kops.segment_reduce(msg, lay.ids_sorted, 8)\n"
+        "    c = kops.edge_softmax(msg, lay.ids_sorted, 8)\n"
+        "    return jax.ops.segment_sum(msg, lay.ids_sorted, 8), a, b, c\n"
+    )
+    errors = cms.check_module(bad)
+    for needle in ("gather_scatter", "segment_reduce", "edge_softmax",
+                   "segment_sum"):
+        assert any(needle in e for e in errors), (needle, errors)
+    assert len(errors) == 4
+
+
+def test_guard_allows_the_contract_surface(tmp_path):
+    ok = tmp_path / "fine_model.py"
+    ok.write_text(
+        "from repro.core import message_passing as mp\n"
+        "def layer(g, x, lay, spec, operands):\n"
+        "    h = mp.mp_layer(g, x, spec=spec, operands=operands, layout=lay)\n"
+        "    att = mp.gat_attention(g, x, x[:, None, :], layout=lay)\n"
+        "    return mp.global_pool(g, h), att\n"
+    )
+    assert cms.check_module(ok) == []
+
+
+def test_guard_runs_as_script():
+    r = subprocess.run(
+        [sys.executable, "tools/check_mp_spec.py"],
+        capture_output=True, text=True, cwd=ROOT,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout

@@ -91,18 +91,15 @@ def test_logical_constraint_noop_on_single_device_mesh():
         assert PT.logical_constraint(x, ("batch", None)) is x
 
 
-def test_deprecation_shims_reexport_runtime():
-    import warnings
+def test_deprecation_shims_are_gone():
+    # the PR-1 shim modules were deleted once external callers migrated;
+    # their import paths must stay dead (a reintroduction would silently
+    # shadow the runtime package as the canonical home)
+    import importlib
 
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        from repro import sharding as old_sharding
-        from repro.core import distributed as old_distributed
-        from repro.launch import mesh as old_mesh
+    import pytest
 
-    assert old_sharding.resolve_spec is PT.resolve_spec
-    assert old_sharding.logical_constraint is PT.logical_constraint
-    assert old_distributed.make_sharded_mp is PT.make_sharded_mp
-    from repro.runtime.mesh import make_production_mesh
-
-    assert old_mesh.make_production_mesh is make_production_mesh
+    for name in ("repro.sharding", "repro.core.distributed",
+                 "repro.launch.mesh"):
+        with pytest.raises(ModuleNotFoundError):
+            importlib.import_module(name)

@@ -1,0 +1,94 @@
+"""Guard: model layer bodies speak the (phi, A, gamma) contract only.
+
+The fused megakernel (``kernels/fused_mp.py``) can only compile a layer
+whose contract is *declarative* — an ``MPSpec`` plus operands, or the
+closure form of ``core.message_passing.mp_layer`` with its named
+aggregation helpers (``pna_aggregate``, ``dgn_aggregate``,
+``gat_attention``).  A model that reaches past that contract and calls the
+aggregation primitives directly re-creates the pre-refactor drift: its
+layer silently stops being fusable and the fused/unfused A/B in
+``benchmarks/bench_layout.py`` compares different computations.
+
+This checker walks every module under ``src/repro/gnn/`` and fails on any
+call, bare or attribute-qualified, to the aggregation primitives:
+
+  * ``gather_scatter`` / ``segment_reduce`` / ``sorted_segment_reduce``
+    (the core/kernels reduction entry points),
+  * ``edge_softmax`` (GAT's primitive — reached via
+    ``core.message_passing.gat_attention``, never directly),
+  * ``segment_sum`` / ``sort_by_segment`` (the raw jax/core machinery).
+
+Layer bodies route everything through ``core.message_passing`` —
+``mp_layer`` (closure or spec form), ``global_pool``, and the named
+aggregate helpers.  ``core/``, ``kernels/``, tests, and benchmarks are
+exempt: they implement or deliberately A/B the primitives.
+
+Exit code 1 with a per-call report on violation.
+
+  python tools/check_mp_spec.py
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+GNN = ROOT / "src" / "repro" / "gnn"
+BANNED = {
+    "gather_scatter",
+    "segment_reduce",
+    "sorted_segment_reduce",
+    "edge_softmax",
+    "segment_sum",
+    "sort_by_segment",
+}
+
+
+def _banned_call(func: ast.AST):
+    """The offending name if this Call's func is a banned primitive."""
+    if isinstance(func, ast.Name) and func.id in BANNED:
+        return func.id
+    if isinstance(func, ast.Attribute) and func.attr in BANNED:
+        return func.attr
+    return None
+
+
+def check_module(path: Path) -> list[str]:
+    try:
+        rel = path.relative_to(ROOT)
+    except ValueError:  # e.g. a tmp file under test
+        rel = path
+    try:
+        tree = ast.parse(path.read_text(), filename=str(rel))
+    except SyntaxError as err:  # pragma: no cover - tier-1 would fail first
+        return [f"{rel}: unparsable ({err})"]
+    errors = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _banned_call(node.func)
+        if name is not None:
+            errors.append(
+                f"{rel}:{node.lineno}: model code calls aggregation "
+                f"primitive `{name}` — go through core.message_passing "
+                f"(mp_layer / MPSpec / the named aggregate helpers)"
+            )
+    return errors
+
+
+def main() -> int:
+    errors = []
+    checked = 0
+    for path in sorted(GNN.rglob("*.py")):
+        checked += 1
+        errors.extend(check_module(path))
+    for e in errors:
+        print(f"ERROR: {e}")
+    if not errors:
+        print(f"mp-spec contract check OK ({checked} modules under gnn/)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
