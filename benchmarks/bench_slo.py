@@ -1,0 +1,192 @@
+"""SLO-aware admission under overload: p99 holds, goodput degrades gracefully.
+
+Sweeps offered load from 0.5x to 2x of the measured saturation capacity
+with a per-request SLO and backpressure enabled, and reports per point:
+goodput (served graphs/s), served-latency percentiles, shed rate, and
+deadline misses.  Without admission control, offered load beyond
+capacity grows the queue without bound and p99 diverges; with it, the
+scheduler sheds the excess at arrival (typed ``Shed`` results) and the
+p99 of *served* requests stays inside the SLO while goodput plateaus at
+capacity instead of collapsing.
+
+A second section exercises ``adapt_ladder``: the rung geometry re-fits
+to the observed flush-size histogram, and the row reports the geometry
+before/after convergence plus any compile cost the refit incurred.
+
+Acceptance (asserted standalone, reported-only under the ``run`` driver):
+  * at 2x overload, p99 of served requests <= the SLO;
+  * goodput at 2x overload >= 0.6x goodput at 1x (graceful, not a cliff);
+  * overload sheds (the queue is actually bounded) but never everything;
+  * zero recompiles after warmup across the whole sweep.
+
+  PYTHONPATH=src python benchmarks/bench_slo.py [n_graphs] [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+from collections import Counter
+
+import jax
+import numpy as np
+
+from repro.data.pipeline import MOLHIV, MoleculeStream
+from repro.gnn import init
+from repro.gnn.models import paper_config
+from repro.serve.gnn_engine import GNNEngine
+from repro.serve.scheduler import StreamScheduler
+
+MODEL = "gin"
+CAPACITY = 8
+MAX_WAIT_S = 0.002
+ADMIT_MARGIN = 0.7
+FRACS = (0.5, 0.75, 1.0, 1.5, 2.0)
+
+
+def _point_row(name, rep, qps, slo_s):
+    return {
+        "name": name,
+        "graphs_per_s": round(rep.graphs_per_s, 1),
+        "derived": {
+            "offered_qps": round(qps, 1),
+            "slo_ms": round(slo_s * 1e3, 2),
+            "p50_ms": round(rep.percentile_ms(50), 2),
+            "p95_ms": round(rep.percentile_ms(95), 2),
+            "p99_ms": round(rep.percentile_ms(99), 2),
+            "served": rep.num_served,
+            "shed": rep.num_shed,
+            "shed_rate": round(rep.shed_rate, 3),
+            "deadline_misses": rep.deadline_misses,
+            "shed_reasons": dict(Counter(x.reason for x in rep.shed)),
+            "mean_batch": round(float(np.mean(rep.batch_sizes)), 2)
+            if rep.batch_sizes else 0.0,
+        },
+    }
+
+
+def run(n_graphs: int = 256, strict: bool = True, smoke: bool = False):
+    cfg = paper_config(MODEL)
+    params = init(jax.random.PRNGKey(0), cfg)
+    eng = GNNEngine(cfg, params)
+    graphs = MoleculeStream(MOLHIV, seed=0).take(n_graphs)
+
+    # -- capacity probe: best-effort saturation (everything queued at t=0,
+    # no SLO), best of two passes so one noisy-CPU spike can't skew the
+    # load points derived from it
+    probe = StreamScheduler(eng, capacity=CAPACITY, max_wait_s=MAX_WAIT_S)
+    probe.run(graphs, qps=0.0)  # warmup: compiles every rung untimed
+    sat = None
+    for _ in range(2):
+        rep = probe.run(graphs, qps=0.0)
+        if sat is None or rep.compute_s < sat.compute_s:
+            sat = rep
+    cap_gps = sat.num_served / sat.compute_s
+    mean_flush_s = sat.compute_s / max(len(sat.batch_sizes), 1)
+    # generous but bounded: an admitted request must be able to clear the
+    # queue-projection plus batching wait plus one real flush
+    slo_s = max(0.02, 10.0 * mean_flush_s)
+
+    # the guard band absorbs full-bucket flushes that legitimately insert
+    # ahead of a deadline-waiting batch after its members were admitted
+    sched = StreamScheduler(
+        eng, capacity=CAPACITY, max_wait_s=MAX_WAIT_S,
+        slo_s=slo_s, admit_limit=4 * CAPACITY, admit_margin=ADMIT_MARGIN,
+        service_s=mean_flush_s,
+    )
+    warm_compile_s = eng.compile_seconds
+
+    rows = [{
+        "name": f"slo_{MODEL}_capacity",
+        "graphs_per_s": round(cap_gps, 1),
+        "derived": {
+            "slo_ms": round(slo_s * 1e3, 2),
+            "mean_flush_ms": round(mean_flush_s * 1e3, 3),
+            "admit_limit": 4 * CAPACITY,
+            "admit_margin": ADMIT_MARGIN,
+        },
+    }]
+    fracs = (0.5, 2.0) if smoke else FRACS
+    by_frac = {}
+    for frac in fracs:
+        qps = frac * cap_gps
+        rep = sched.run(graphs, qps=qps)
+        by_frac[frac] = rep
+        rows.append(_point_row(f"slo_{MODEL}_load{frac:g}x", rep, qps, slo_s))
+
+    # -- acceptance
+    over = by_frac[2.0]
+    p99_ok = over.percentile_ms(99) <= slo_s * 1e3
+    served_floor = over.num_served > 0
+    sheds_under_overload = over.num_shed > 0
+    graceful = True
+    if 1.0 in by_frac:
+        graceful = over.graphs_per_s >= 0.6 * by_frac[1.0].graphs_per_s
+    no_recompiles = eng.compile_seconds == warm_compile_s
+    rows[0]["derived"].update({
+        "p99_within_slo_at_2x": p99_ok,
+        "graceful_degradation": graceful,
+        "sheds_under_overload": sheds_under_overload,
+        "recompile_s_after_warmup": round(eng.compile_seconds - warm_compile_s, 3),
+    })
+    if strict:
+        assert p99_ok, (
+            f"p99 {over.percentile_ms(99):.2f}ms exceeds SLO {slo_s * 1e3:.2f}ms "
+            f"at 2x overload — admission control is not holding the line"
+        )
+        assert sheds_under_overload and served_floor, (
+            f"2x overload should shed some and serve some "
+            f"(served={over.num_served}, shed={over.num_shed})"
+        )
+        assert graceful, (
+            f"goodput cliff at 2x: {over.graphs_per_s:.0f} < 0.6x of 1x point"
+        )
+        assert no_recompiles, (
+            f"recompiles after warmup: compile_seconds moved "
+            f"{warm_compile_s:.3f} -> {eng.compile_seconds:.3f}"
+        )
+    elif not (p99_ok and graceful and sheds_under_overload and no_recompiles):
+        print(f"# WARNING: acceptance not met (p99_ok={p99_ok}, "
+              f"graceful={graceful}, sheds={sheds_under_overload}, "
+              f"no_recompiles={no_recompiles})")
+
+    # -- adaptive ladder: geometry converges to observed demand (its lazy
+    # rung warms are untimed but tracked, so report them rather than
+    # folding them into the sweep's zero-recompile acceptance)
+    if not smoke:
+        ad = StreamScheduler(
+            eng, capacity=CAPACITY, max_wait_s=MAX_WAIT_S, slo_s=slo_s,
+            adapt_ladder=True, refit_every=8, max_rungs=4,
+            service_s=mean_flush_s,
+        )
+        compile_before = eng.compile_seconds
+        ad.run(graphs, qps=cap_gps)  # first pass: observe + refit
+        sig = max(ad._ladders, key=lambda k: len(ad._obs_multiples.get(k, [])),
+                  default=None)
+        rep = ad.run(graphs, qps=cap_gps)  # converged geometry
+        rows.append({
+            "name": f"slo_{MODEL}_adaptive",
+            "graphs_per_s": round(rep.graphs_per_s, 1),
+            "derived": {
+                "ladder_multiples": ad.ladder_multiples(sig) if sig else [],
+                "max_rungs": 4,
+                "p99_ms": round(rep.percentile_ms(99), 2),
+                "refit_compile_s": round(eng.compile_seconds - compile_before, 3),
+            },
+        })
+    return rows
+
+
+def main(strict: bool = False):
+    smoke = "--smoke" in sys.argv
+    digits = [a for a in sys.argv[1:] if a.isdigit()]
+    # the full stream must be long enough that a 2x burst outruns the SLO
+    # (the backlog grows at ~capacity graphs/s of deficit; a short stream
+    # drains before the projection ever exceeds the budget)
+    n = int(digits[0]) if digits else (24 if smoke else 256)
+    rows = run(n, strict=strict, smoke=smoke)
+    for row in rows:
+        print(f"{row['name']},{row['graphs_per_s']},{row['derived']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(strict="--smoke" not in sys.argv)

@@ -6,6 +6,7 @@ config, metrics, timestamp — see benchmarks/bench_io.py) so the perf
 trajectory is tracked across PRs.  Sections:
   fig7   per-model GNN inference latency (engine vs dense-SpMM, stream vs batch)
   stream packed micro-batched streaming vs one-graph mode (QPS sweep)
+  slo    SLO-aware admission: overload sweep (p99 holds, goodput plateaus)
   fig8   large-graph DGN (Cora/CiteSeer/PubMed sizes)
   fig9   NE/MP pipelining speed-ups (sweep + MolHIV + virtual node)
   table4 per-model resource footprint (params/FLOPs/bytes/VMEM tiles)
@@ -19,7 +20,7 @@ import sys
 
 def main() -> None:
     sections = sys.argv[1:] or [
-        "fig9", "table4", "fig8", "fig7", "stream", "quant", "layout",
+        "fig9", "table4", "fig8", "fig7", "stream", "slo", "quant", "layout",
         "multitenant", "roofline"
     ]
     from benchmarks import (
@@ -30,6 +31,7 @@ def main() -> None:
         bench_multitenant,
         bench_quant,
         bench_roofline,
+        bench_slo,
         bench_stream_throughput,
         bench_table4_resources,
     )
@@ -41,6 +43,7 @@ def main() -> None:
         "fig9": bench_fig9_pipeline,
         "table4": bench_table4_resources,
         "stream": bench_stream_throughput,
+        "slo": bench_slo,
         "quant": bench_quant,
         "layout": bench_layout,
         "multitenant": bench_multitenant,

@@ -6,10 +6,15 @@ Examples (CPU, reduced configs):
   PYTHONPATH=src python -m repro.launch.serve --gnn gin --n-graphs 32
   PYTHONPATH=src python -m repro.launch.serve --gnn gin --stream \
       --n-graphs 64 --qps 2000 --max-wait-ms 2
+  PYTHONPATH=src python -m repro.launch.serve --gnn gin --stream \
+      --n-graphs 64 --qps 8000 --slo-ms 20 --admit-limit 32 --adapt-ladder
+  PYTHONPATH=src python -m repro.launch.serve --gnn gin --stream \
+      --n-graphs 64 --qps 8000 --priority 0,0,1 --slo-ms 0:10,1:50
   PYTHONPATH=src python -m repro.launch.serve --models gcn:int8,gat:fp32 \
-      --n-graphs 32 --qps 1000
+      --n-graphs 32 --qps 1000 --slo-ms 20
 """
 import argparse
+from collections import Counter
 
 import jax
 import numpy as np
@@ -39,6 +44,37 @@ def serve_lm(args):
     print("generated:", out[:2])
     print(f"prefill {stats['prefill_s']*1e3:.1f} ms, "
           f"decode {stats['decode_s_per_token']*1e3:.2f} ms/token")
+
+
+def _slo_kwargs(args):
+    """StreamScheduler admission kwargs from the CLI flags.
+
+    ``--slo-ms`` is either one budget for every request ("20") or a
+    per-QoS-class table ("0:10,1:50" -> ``slo_by_class``); ``--priority``
+    cycles its classes over the stream round-robin."""
+    kw = dict(admit_limit=args.admit_limit, admit_margin=args.admit_margin,
+              adapt_ladder=args.adapt_ladder)
+    if args.slo_ms:
+        if ":" in args.slo_ms:
+            kw["slo_by_class"] = {
+                (None, int(cls)): float(ms) * 1e-3
+                for cls, _, ms in (s.partition(":")
+                                   for s in args.slo_ms.split(","))
+            }
+        else:
+            kw["slo_s"] = float(args.slo_ms) * 1e-3
+    return kw
+
+
+def _priorities(args, n):
+    cycle = [int(p) for p in args.priority.split(",")]
+    return [cycle[i % len(cycle)] for i in range(n)]
+
+
+def _print_admission(rep):
+    print(f"  admission: served {rep.num_served}  shed {rep.num_shed} "
+          f"({dict(Counter(x.reason for x in rep.shed))}); "
+          f"deadline misses {rep.deadline_misses}")
 
 
 def serve_gnn_multitenant(args):
@@ -74,10 +110,11 @@ def serve_gnn_multitenant(args):
         specs.append(spec)
     sched = StreamScheduler(ex, capacity=args.pack,
                             max_wait_s=args.max_wait_ms * 1e-3,
-                            with_eigvec="auto")
+                            with_eigvec="auto", **_slo_kwargs(args))
     graphs = [g[:4] for g in MoleculeStream(MOLHIV, seed=0).take(args.n_graphs)]
     models = [specs[i % len(specs)] for i in range(len(graphs))]
-    rep = sched.run(graphs, qps=args.qps, models=models)
+    rep = sched.run(graphs, qps=args.qps, models=models,
+                    priorities=_priorities(args, len(graphs)))
     counts = {s: models.count(s) for s in specs}
     print(f"multi-tenant stream(qps={args.qps:g}, pack x{args.pack}, "
           f"tenants {counts}): {rep.num_requests} graphs in "
@@ -88,6 +125,7 @@ def serve_gnn_multitenant(args):
     print(f"  {len(rep.batch_sizes)} flushes (reasons {dict(rep.flush_reasons)}); "
           f"{len(ex._compiled)} compiled programs, "
           f"compile {rep.compile_s:.1f}s excluded")
+    _print_admission(rep)
 
 
 def serve_gnn(args):
@@ -121,9 +159,10 @@ def serve_gnn(args):
 
         sched = StreamScheduler(
             eng, capacity=args.pack, max_wait_s=args.max_wait_ms * 1e-3,
-            with_eigvec=(args.gnn == "dgn"),
+            with_eigvec=(args.gnn == "dgn"), **_slo_kwargs(args),
         )
-        rep = sched.run(graphs, qps=args.qps)
+        rep = sched.run(graphs, qps=args.qps,
+                        priorities=_priorities(args, len(graphs)))
         if rep.num_requests == 0:
             print(f"{args.gnn} stream: no graphs (--n-graphs {args.n_graphs})")
             return
@@ -138,6 +177,7 @@ def serve_gnn(args):
         print(f"  {len(sizes)} flushes (mean batch {sizes.mean():.1f}, "
               f"reasons {dict(rep.flush_reasons)}); "
               f"compile {rep.compile_s:.1f}s excluded")
+        _print_admission(rep)
         return
     if args.batched:
         outs, per_graph_s = eng.infer_batched(
@@ -181,6 +221,24 @@ def main():
                     help="stream: flush a bucket at latest this long after it opens")
     ap.add_argument("--pack", type=int, default=4,
                     help="stream: packed budget = this many base buckets")
+    ap.add_argument("--slo-ms", default="",
+                    help="stream: per-request latency SLO; one budget "
+                         "('20') or a class:ms table ('0:10,1:50'); "
+                         "enables admission control (empty = best-effort, "
+                         "never shed)")
+    ap.add_argument("--priority", default="0",
+                    help="stream: QoS classes cycled over the stream "
+                         "round-robin (lower = more urgent), e.g. '0,0,1'")
+    ap.add_argument("--admit-limit", type=int, default=None,
+                    help="stream: bound on admitted-but-unflushed requests; "
+                         "arrivals beyond it shed with reason queue_full")
+    ap.add_argument("--admit-margin", type=float, default=1.0,
+                    help="stream: fraction of the SLO the admission "
+                         "projection may use (guard band; see "
+                         "serve/scheduler.py)")
+    ap.add_argument("--adapt-ladder", action="store_true",
+                    help="stream: re-fit each signature's bucket-rung "
+                         "geometry to the observed flush-size histogram")
     ap.add_argument("--gnn-mesh", type=int, default=1,
                     help="GNN: shard node/edge rows over this many devices")
     ap.add_argument("--fused", action="store_true",

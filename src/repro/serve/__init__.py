@@ -1,8 +1,15 @@
 """Serving engines: the composable Executor pipeline (prepare -> constrain
 -> warm -> run) with multi-tenant registration, the single-tenant
-GNNEngine facade, the streaming micro-batching scheduler, and the batched
-LM prefill/decode server."""
+GNNEngine facade, the SLO-aware streaming micro-batching scheduler on its
+deterministic virtual clock, and the batched LM prefill/decode server."""
+from repro.serve.clock import Clock, RealClock, VirtualClock
 from repro.serve.executor import Executor, PreparedBatch, Tenant, trace_signature
 from repro.serve.gnn_engine import GNNEngine
 from repro.serve.engine import LMServer, ServeConfig
-from repro.serve.scheduler import Request, StreamReport, StreamScheduler
+from repro.serve.scheduler import (
+    FlushRecord,
+    Request,
+    Shed,
+    StreamReport,
+    StreamScheduler,
+)

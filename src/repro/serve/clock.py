@@ -1,0 +1,85 @@
+"""The serving stack's one time authority: an injectable ``Clock``.
+
+Scheduling correctness lives in timing edge cases — deadline expiry vs
+arrival ties, backlog-aware flush ordering, shed decisions taken at
+admission time — and none of that is testable against a wall clock.  So
+the scheduler never reads wall time: every ``arrival_s`` / ``deadline_s``
+/ flush timestamp flows through a ``Clock`` object, and the event loop
+*advances* that clock to each event it processes.
+
+Two implementations:
+
+* :class:`VirtualClock` — deterministic simulated time.  The scheduler's
+  default: time moves only when the event loop says so, so a scripted
+  arrival trace produces bitwise-identical flush timestamps, shed
+  decisions, and latencies on every run (``tests/test_slo_sim.py``
+  asserts exact float equality, no tolerance).
+* :class:`RealClock` — ``time.perf_counter`` for live deployment, where
+  arrivals are stamped as they happen.  This module and
+  ``serve/executor.py`` are the only places in the serving stack allowed
+  to touch the ``time`` module (``tools/check_engine_singlepath.py``
+  walks every other ``serve/`` module and fails on ``time.time`` /
+  ``time.monotonic`` / ``time.perf_counter`` references), so a wall-clock
+  read can never sneak back into scheduling logic.
+
+The :class:`Executor` measures its compute durations through its own
+injected clock too (``Executor(clock=...)``, default ``RealClock``) —
+its timed region stays the single place real time is *measured*, and a
+test can substitute a stepping clock to make even compute durations
+deterministic.
+"""
+from __future__ import annotations
+
+import time
+
+
+class Clock:
+    """Minimal time-source protocol: monotone seconds since an arbitrary
+    epoch.  Durations are differences of ``now()`` readings; absolute
+    values are meaningless across clock instances."""
+
+    def now(self) -> float:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class RealClock(Clock):
+    """Wall time via ``time.perf_counter`` (highest-resolution monotone
+    source) — the live-serving and executor-measurement clock."""
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+
+class VirtualClock(Clock):
+    """Deterministic simulated time, advanced explicitly by its owner.
+
+    Time never moves on its own and never moves backwards: the scheduler
+    advances it to each event (arrival, deadline expiry, flush
+    completion) in order, so every timestamp in a simulated stream is an
+    exact, reproducible function of the input trace.
+    """
+
+    __slots__ = ("_now_s",)
+
+    def __init__(self, start_s: float = 0.0):
+        self._now_s = float(start_s)
+
+    def now(self) -> float:
+        return self._now_s
+
+    def advance_to(self, t_s: float) -> float:
+        """Move time forward to ``t_s``; moving backwards is a scheduling
+        bug and raises rather than silently reordering events."""
+        if t_s < self._now_s:
+            raise ValueError(
+                f"virtual time cannot go backwards: now={self._now_s!r}, "
+                f"requested {t_s!r}"
+            )
+        self._now_s = float(t_s)
+        return self._now_s
+
+    def advance(self, dt_s: float) -> float:
+        """Move time forward by a non-negative delta."""
+        if dt_s < 0:
+            raise ValueError(f"negative advance: {dt_s!r}")
+        return self.advance_to(self._now_s + dt_s)

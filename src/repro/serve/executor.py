@@ -25,8 +25,13 @@ that mode x axis matrix into a pipeline of small stages:
   signature function (:func:`trace_signature`, keyed on every input leaf's
   shape+dtype) covers all modes — the stream mode's old two-field
   signature missed mid-stream dtype changes.
-* **run** — the single ``time.perf_counter`` timed region in the serving
-  stack (``tools/check_engine_singlepath.py`` keeps it that way).
+* **run** — the single timed region in the serving stack.  Durations are
+  read through the executor's injected ``serve.clock.Clock`` (default
+  ``RealClock``, i.e. ``time.perf_counter``); substituting a stepping
+  clock makes even compute durations deterministic under test.
+  ``tools/check_engine_singlepath.py`` keeps this the only place real
+  time is measured: every reference to the ``time`` module outside this
+  file and ``serve/clock.py`` fails the guard.
 
 On top of the pipeline the executor is **multi-tenant**:
 ``register(name, cfg, params, precision=...)`` admits several GNN models —
@@ -44,7 +49,6 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import time
 from typing import Callable, Dict, Optional, Sequence, Set, Tuple
 
 import jax
@@ -52,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import runtime as RT
+from repro.serve.clock import Clock, RealClock
 from repro.core import batching as B
 from repro.core import graph as G
 from repro.core import layout as LY
@@ -183,9 +188,13 @@ class Executor:
         buckets: Sequence[tuple] = DEFAULT_BUCKETS,
         mesh=None,
         rules: Optional[dict] = None,
+        clock: Optional[Clock] = None,
     ):
         self.buckets = sorted(buckets)
         self.mesh = mesh
+        # the one place real time is measured in the serving stack; a test
+        # can inject a stepping clock for deterministic compute durations
+        self.clock = clock if clock is not None else RealClock()
         if rules is None and mesh is not None:
             rules = RT.gnn_rules(mesh)
         self.rules = rules
@@ -352,9 +361,9 @@ class Executor:
         just the first call).  Returns the time spent warming."""
         if sig in cb.warm:
             return 0.0
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         jax.block_until_ready(cb.fn(params, p.graph, p.eigvec, p.layout))
-        dt = time.perf_counter() - t0
+        dt = self.clock.now() - t0
         cb.warm.add(sig)
         cb.compile_s += dt
         return dt
@@ -433,17 +442,17 @@ class Executor:
             model: Optional[str] = None) -> Tuple[np.ndarray, float]:
         """The one timed execution path.  Warms the signature first (un-
         timed, recorded in ``compile_seconds``), then runs and returns
-        ``(outputs, seconds)`` — the only ``perf_counter`` region in the
-        serving stack."""
+        ``(outputs, seconds)`` — the only timed region in the serving
+        stack, read through the executor's injected clock."""
         tenant = self.tenant(model)
         cb = self._program(tenant, p.bucket_key, p.num_graphs)
         with self._mesh_scope():
             self._warm(cb, (tenant.params_sig,) + p.signature, tenant.params, p)
-            t0 = time.perf_counter()
+            t0 = self.clock.now()
             out = jax.block_until_ready(
                 cb.fn(tenant.params, p.graph, p.eigvec, p.layout)
             )
-            dt = time.perf_counter() - t0
+            dt = self.clock.now() - t0
         return np.asarray(out), dt
 
     # ------------------------------------------------------------- misc

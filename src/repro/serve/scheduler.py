@@ -1,56 +1,82 @@
-"""Streaming multi-graph scheduler: request queue + multi-tenant micro-batcher.
+"""Streaming multi-graph scheduler: SLO-aware admission + micro-batcher.
 
 The paper's real-time mode serves one graph per program dispatch; under
 heavy traffic the dispatch overhead dominates for molecule-sized graphs.
 FlowGNN's multi-queue insight applies directly: keep *multiple open
-buckets* — one per (tenant, compiled-shape signature) — and greedily pack
-arriving graphs into the open bucket for their signature until the
-bucket's ``BucketBudget`` is exhausted or a max-wait deadline expires,
+buckets* — one per (tenant, QoS class, compiled-shape signature) — and
+greedily pack arriving graphs into the open bucket for their key until
+the bucket's ``BucketBudget`` is exhausted or a flush deadline expires,
 then flush the packed batch through the executor.  Every flush of a
 signature reuses the same compiled program, so after one warm flush per
 signature the stream runs with zero recompiles.
 
-Admission is per-bucket: a request maps to the smallest single-graph
-bucket that fits it (``Executor.bucket_for``), and its packed budget is
-``capacity`` multiples of that bucket with ``2*capacity`` graph slots —
-small graphs pack denser than the worst case, so the node / edge budgets
-bind before the slot count does.
+**Time.** Nothing here reads a wall clock.  All ``arrival_s`` /
+``deadline_s`` / flush timing flows through an injectable
+``serve.clock.Clock`` that the event loop advances deterministically —
+the default is a fresh ``VirtualClock`` per ``run``, so a scripted
+arrival trace reproduces every flush timestamp and shed decision
+bitwise (``tests/test_slo_sim.py`` asserts exact float equality).  The
+only real-time measurement in the serving stack is the executor's
+compute region (``tools/check_engine_singlepath.py`` enforces that
+``time`` is untouchable outside ``serve/executor.py`` + ``serve/clock.py``).
 
-Each signature owns a *budget ladder* (rungs 1, 2, 3, 4, 6, 8, 12, ...,
-``capacity`` multiples of the base bucket — powers of two and their
-1.5x midpoints, bounding padding slack at a flush to ~33%): admission
-always targets the top rung, but a flush executes on the smallest rung
-that fits what actually accumulated, so a deadline flush carrying one
-graph runs a program no bigger than the single-graph mode's.  Ladder
-*geometry* is shared across tenants (one ladder per signature, however
-many models it serves); warm state is per tenant program, governed by
-``prewarm``:
+**Admission (SLO-aware).**  A request maps to the smallest single-graph
+bucket that fits it (``Executor.bucket_for``) and carries a QoS class
+(``Request.priority``, lower = more urgent) and an SLO budget
+(``slo_s``, resolved per (tenant, class)).  At its arrival instant the
+scheduler projects the queueing delay the request would suffer —
+``max(0, device_free - now)``, plus one observed service-time estimate
+per already-open bucket (admitted work the device has not seen yet),
+plus the flush this request would ride — and **sheds** the request with
+a typed :class:`Shed` result when the projection exceeds
+``admit_margin * slo`` (the guard band absorbs flushes that insert
+ahead after admission; see the ``admit_margin`` docstring)
+(no executor work, no queue growth) when the projection already exceeds
+the SLO; an optional ``admit_limit`` bounds the total admitted-but-
+unflushed queue the same way (reason ``"queue_full"``).  Under overload
+the queue therefore stays bounded and the p99 of *admitted* requests
+holds near the SLO while the shed rate absorbs the excess — goodput
+degrades gracefully instead of latency collapsing
+(``benchmarks/bench_slo.py`` sweeps 0.5x–2x capacity and asserts this).
+
+**Flush ordering (QoS).**  A bucket's flush deadline is the earliest of
+``opened_at + max_wait_s`` and each member's SLO deadline minus the
+service estimate.  When several buckets are ready at the same effective
+instant (the common case under backlog, where every expired bucket waits
+on ``device_free``), the highest-priority class flushes first; ties
+break by bucket age — a deterministic total order.
+
+**Budget ladder.**  Each signature owns rungs at 1x, 2x, 3x, 4x, 6x,
+8x, ..., ``capacity``x of the base bucket (powers of two plus their 1.5x
+midpoints, bounding padding slack at a flush to ~33%): admission always
+targets the top rung, but a flush executes on the smallest rung that
+fits what actually accumulated.  With ``adapt_ladder=True`` the rung
+geometry *re-fits itself* to the observed flush-size histogram every
+``refit_every`` flushes per signature: rungs traffic never hits are
+closed, rungs the histogram needs are opened (and warm lazily, riding
+the ``prewarm="lazy"`` machinery), while the top rung is always kept at
+``capacity`` so everything admissible before a refit stays admissible
+after it.  Ladder *geometry* is shared across tenants; warm state is per
+tenant program, governed by ``prewarm``:
 
   * ``"eager"`` (single-tenant default, the historical behaviour): every
     rung compiles untimed the first time its signature appears, so a live
     stream never recompiles after warmup no matter how load fluctuates.
   * ``"lazy"`` (multi-tenant default): a rung warms — still strictly
     outside the timed region, tracked in ``compile_seconds`` — on its
-    first flush.  One control plane seeing all tenants' traffic only pays
-    for the (tenant, rung) programs the load actually exercises, which is
-    where the shared executor's warm-time and memory win over N separate
-    engines comes from (measured by ``benchmarks/bench_multitenant.py``).
+    first flush.
 
 Every flush carries its pack-time payload: ``_execute`` calls
 ``core.batching.pack_prepared``, which emits the padded graph, the packed
 eigenvectors, and the host-built ``GraphLayout`` plan as one
-``PreparedBatch`` — the flushed program performs zero on-device sorts
-(the paper's COO conversion happens once at pack time and is reused by
-every layer, §3.4).
+``PreparedBatch`` — the flushed program performs zero on-device sorts.
 
 ``StreamScheduler.run`` is an event-driven simulation of a live stream on
 a single serial executor: arrivals are offered at a configurable rate
-(QPS), flushes execute real engine compute (measured wall time), and a
-virtual clock folds the two together — so reported per-request latency
-includes queueing delay (time waiting for the bucket to fill or the
-device to free up), which is what a latency-vs-throughput sweep needs.
-Multi-tenant streams tag each request with its model name
-(``run(graphs, models=[...])``); packed flushes dispatch per tenant.
+(QPS) or as an explicit timestamp trace, flushes execute real engine
+compute (measured wall time inside the executor), and the virtual clock
+folds the two together — so reported per-request latency includes
+queueing delay, which is what a latency-vs-throughput sweep needs.
 """
 from __future__ import annotations
 
@@ -67,18 +93,25 @@ from repro.core.batching import (
     pack_prepared,
     unpack_outputs,
 )
+from repro.serve.clock import Clock, VirtualClock
 from repro.serve.executor import Executor
 
 
 @dataclasses.dataclass
 class Request:
-    """One in-flight graph: raw COO payload + arrival timestamp + the
-    tenant it is routed to (``None`` = the sole registered model)."""
+    """One in-flight graph: raw COO payload + arrival timestamp + routing.
+
+    ``model`` names the tenant (``None`` = the sole registered model);
+    ``priority`` is the QoS class (lower = more urgent, 0 = default);
+    ``slo_s`` is the end-to-end latency budget from arrival (``inf`` =
+    best-effort, never shed, never deadline-tightened)."""
 
     rid: int
     graph: tuple  # (senders, receivers, node_feat[, edge_feat])
     arrival_s: float
     model: Optional[str] = None
+    priority: int = 0
+    slo_s: float = math.inf
     n: int = 0
     e: int = 0
 
@@ -87,45 +120,118 @@ class Request:
             self.graph = (*self.graph, None)
         self.n, self.e = graph_sizes(self.graph)
 
+    @property
+    def deadline_s(self) -> float:
+        """The SLO deadline: completion after this is a deadline miss."""
+        return self.arrival_s + self.slo_s
+
+
+@dataclasses.dataclass(frozen=True)
+class Shed:
+    """A typed admission rejection — the backpressure signal a caller can
+    retry, downgrade, or route elsewhere on.  ``projected_delay_s`` is
+    the queueing-delay estimate that triggered the decision."""
+
+    rid: int
+    model: Optional[str]
+    priority: int
+    reason: str  # "backlog" | "queue_full"
+    at_s: float  # virtual admission instant
+    projected_delay_s: float
+    slo_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class FlushRecord:
+    """One flush event, fully timestamped on the virtual clock — the
+    deterministic audit trail the simulation tests assert against."""
+
+    model: Optional[str]
+    priority: int
+    sig: tuple  # base-bucket signature (N_pad, E_pad)
+    rids: Tuple[int, ...]
+    reason: str  # budget | deadline | drain
+    at_s: float  # flush decision instant
+    start_s: float  # when the device actually started (>= at_s)
+    done_s: float  # start_s + compute
+    compute_s: float
+    rung_multiple: int  # executed rung, in base-bucket multiples
+
 
 @dataclasses.dataclass
 class StreamReport:
-    """Per-request latencies plus stream-level accounting."""
+    """Per-request latencies plus stream-level accounting.
 
-    latencies_s: np.ndarray  # (n_requests,) completion - arrival, rid order
-    outputs: List[np.ndarray]  # per-request model outputs, rid order
+    ``outputs`` / ``latencies_s`` are rid-ordered over every *offered*
+    request; shed requests hold ``None`` / ``nan`` there and appear as
+    typed :class:`Shed` entries in ``shed``.  Conservation always holds:
+    ``num_served + num_shed == num_requests``."""
+
+    latencies_s: np.ndarray  # (n_offered,) completion - arrival; nan if shed
+    outputs: List[Optional[np.ndarray]]  # rid order; None for shed requests
     batch_sizes: List[int]  # real graphs per flush, flush order
     flush_reasons: Counter  # budget | deadline | drain
     compute_s: float  # total engine compute across flushes
     makespan_s: float  # virtual time from first arrival to last completion
     compile_s: float  # warm/compile time (excluded from latencies)
+    shed: List[Shed] = dataclasses.field(default_factory=list)
+    flush_log: List[FlushRecord] = dataclasses.field(default_factory=list)
+    deadline_misses: int = 0  # admitted requests that finished past their SLO
 
     @property
     def num_requests(self) -> int:
+        """Offered requests (served + shed)."""
         return len(self.outputs)
 
     @property
+    def num_shed(self) -> int:
+        return len(self.shed)
+
+    @property
+    def num_served(self) -> int:
+        return self.num_requests - self.num_shed
+
+    @property
+    def shed_rate(self) -> float:
+        return self.num_shed / max(self.num_requests, 1)
+
+    @property
     def graphs_per_s(self) -> float:
-        return self.num_requests / max(self.makespan_s, 1e-12)
+        """Goodput: *served* graphs per second of makespan."""
+        return self.num_served / max(self.makespan_s, 1e-12)
 
     def percentile_ms(self, q: float) -> float:
-        return float(np.percentile(self.latencies_s, q) * 1e3)
+        """Latency percentile over the requests that were actually served.
+
+        ``nan`` when nothing was served (empty stream, or everything
+        shed) — an empty report must be representable, not a crash."""
+        served = self.latencies_s[np.isfinite(self.latencies_s)]
+        if served.size == 0:
+            return float("nan")
+        return float(np.percentile(served, q) * 1e3)
 
 
 class _OpenBucket:
-    """One (tenant, signature)'s accumulating micro-batch.
+    """One (tenant, QoS class, signature)'s accumulating micro-batch.
 
     Admission is checked against the *top* rung of the signature's ladder;
     ``rung()`` picks the smallest rung the accumulated batch fits, which
-    is the program a flush actually executes.
+    is the program a flush actually executes.  The flush deadline starts
+    at ``opened_at + max_wait_s`` and tightens as SLO-carrying members
+    join (their deadline minus the service estimate, clamped at their
+    arrival), so a bucket never idles a member into a deadline miss the
+    scheduler could have avoided.
     """
 
-    __slots__ = ("model", "ladder", "budget", "requests", "n_used", "e_used",
-                 "deadline_s")
+    __slots__ = ("model", "priority", "seq", "ladder", "budget", "requests",
+                 "n_used", "e_used", "deadline_s")
 
     def __init__(self, ladder: Sequence[BucketBudget], opened_at_s: float,
-                 max_wait_s: float, model: Optional[str] = None):
+                 max_wait_s: float, model: Optional[str] = None,
+                 priority: int = 0, seq: int = 0):
         self.model = model
+        self.priority = priority
+        self.seq = seq  # open order: the deterministic final tie-break
         self.ladder = ladder
         self.budget = ladder[-1]
         self.requests: List[Request] = []
@@ -144,10 +250,15 @@ class _OpenBucket:
         return self.budget.admits(self.n_used, self.e_used, len(self.requests),
                                   req.n, req.e)
 
-    def add(self, req: Request) -> None:
+    def add(self, req: Request, service_est_s: float = 0.0) -> None:
         self.requests.append(req)
         self.n_used += req.n
         self.e_used += req.e
+        if math.isfinite(req.slo_s):
+            self.deadline_s = min(
+                self.deadline_s,
+                max(req.arrival_s, req.deadline_s - service_est_s),
+            )
 
     @property
     def full(self) -> bool:
@@ -156,22 +267,50 @@ class _OpenBucket:
 
 
 class StreamScheduler:
-    """Micro-batching front-end for the serving executor.
+    """SLO-aware micro-batching front-end for the serving executor.
 
-    engine:      a single-tenant ``GNNEngine`` facade **or** a multi-tenant
-                 ``Executor`` — all compute and warm bookkeeping goes
-                 through the executor either way.
-    capacity:    packed budgets are ``capacity`` multiples of the base
-                 single-graph bucket (with ``2*capacity`` graph slots).
-    max_wait_s:  a bucket flushes at latest this long after it opened —
-                 the latency ceiling a request pays for batching.
-    with_eigvec: compute DGN's Laplacian-eigenvector input per request
-                 (host-side, part of data generation, as in the paper);
-                 ``"auto"`` resolves per tenant (eigvec iff the tenant's
-                 model is DGN) — the multi-tenant setting.
-    prewarm:     ``"eager"`` / ``"lazy"`` ladder warm policy (see module
-                 docstring); default eager for a single engine (the
-                 historical guarantee), lazy for a multi-tenant executor.
+    engine:       a single-tenant ``GNNEngine`` facade **or** a
+                  multi-tenant ``Executor`` — all compute and warm
+                  bookkeeping goes through the executor either way.
+    capacity:     packed budgets are ``capacity`` multiples of the base
+                  single-graph bucket (with ``2*capacity`` graph slots).
+    max_wait_s:   the batching latency ceiling: a bucket flushes at latest
+                  this long after it opened (SLO deadlines can tighten
+                  an individual bucket further, never loosen it).
+    with_eigvec:  compute DGN's Laplacian-eigenvector input per request;
+                  ``"auto"`` resolves per tenant (eigvec iff DGN).
+    budgets:      explicit per-signature ladders (overrides derivation).
+    prewarm:      ``"eager"`` / ``"lazy"`` ladder warm policy (see module
+                  docstring); default eager for a single engine, lazy for
+                  a multi-tenant executor.
+    slo_s:        default SLO budget (seconds from arrival) for every
+                  request; ``None`` = best-effort (no shedding, no
+                  deadline accounting) — the historical behaviour.
+    slo_by_class: ``{(model|None, priority): slo_s}`` overrides — the
+                  per-(tenant, QoS class) SLO table; ``None`` model keys
+                  apply to every tenant.
+    admit_limit:  bound on admitted-but-unflushed requests; arrivals
+                  beyond it shed with reason ``"queue_full"``.
+    admit_margin: fraction of the SLO the admission projection may use
+                  (0 < margin <= 1, default 1.0).  Under sustained
+                  overload, flushes of buckets *filled after* a request
+                  was admitted legitimately run before its own
+                  deadline-flush, so projecting against the full SLO
+                  leaves the tail no headroom; a guard band (e.g. 0.7)
+                  sheds at ``projected > margin * slo`` and keeps the
+                  p99 of served requests inside the advertised SLO.
+                  Deadline accounting still uses the full SLO.
+    adapt_ladder: re-fit each signature's rung geometry to the observed
+                  flush-size histogram every ``refit_every`` flushes
+                  (top rung pinned at ``capacity``; at most ``max_rungs``
+                  rungs survive a refit).
+    service_s:    initial per-signature service-time estimate used by
+                  admission / deadline tightening before the first flush
+                  is observed (then an EWMA of measured flush compute).
+    clock:        the time authority; ``None`` = a fresh deterministic
+                  ``VirtualClock`` per ``run``.  Inject a shared clock to
+                  chain runs on one timeline, or a ``RealClock`` to stamp
+                  live arrivals.
     """
 
     def __init__(
@@ -182,6 +321,15 @@ class StreamScheduler:
         with_eigvec: Union[bool, str] = False,
         budgets: Optional[Dict[tuple, Sequence[BucketBudget]]] = None,
         prewarm: Optional[str] = None,
+        slo_s: Optional[float] = None,
+        slo_by_class: Optional[Dict[Tuple[Optional[str], int], float]] = None,
+        admit_limit: Optional[int] = None,
+        admit_margin: float = 1.0,
+        adapt_ladder: bool = False,
+        refit_every: int = 64,
+        max_rungs: int = 8,
+        service_s: float = 0.0,
+        clock: Optional[Clock] = None,
     ):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
@@ -197,15 +345,36 @@ class StreamScheduler:
             prewarm = "eager" if self.engine is not None else "lazy"
         if prewarm not in ("eager", "lazy"):
             raise ValueError(f"prewarm must be 'eager' or 'lazy', got {prewarm!r}")
+        if admit_limit is not None and admit_limit < 1:
+            raise ValueError("admit_limit must be >= 1 (or None for unbounded)")
+        if not 0.0 < admit_margin <= 1.0:
+            raise ValueError("admit_margin must be in (0, 1]")
+        if refit_every < 1:
+            raise ValueError("refit_every must be >= 1")
+        if max_rungs < 2:
+            raise ValueError("max_rungs must be >= 2 (base + top)")
         self.prewarm = prewarm
         self.capacity = capacity
         self.max_wait_s = max_wait_s
         self.with_eigvec = with_eigvec
+        self.slo_s = slo_s
+        self.slo_by_class = dict(slo_by_class or {})
+        self.admit_limit = admit_limit
+        self.admit_margin = admit_margin
+        self.adapt_ladder = adapt_ladder
+        self.refit_every = refit_every
+        self.max_rungs = max_rungs
+        self.service_s = service_s
+        self.clock = clock
         # signature key -> ascending budget ladder (custom or derived);
         # geometry is shared across tenants
         self._ladders: Dict[tuple, List[BucketBudget]] = {
             k: sorted(v) for k, v in (budgets or {}).items()
         }
+        # per-signature service-time EWMA (measured flush compute) and the
+        # observed ideal-rung-multiple window the adaptive refit consumes
+        self._svc_s: Dict[tuple, float] = {}
+        self._obs_multiples: Dict[tuple, List[int]] = {}
 
     # ------------------------------------------------------------ admission
 
@@ -213,6 +382,26 @@ class StreamScheduler:
         if self.with_eigvec == "auto":
             return self.executor.tenant(model).cfg.model == "dgn"
         return bool(self.with_eigvec)
+
+    def resolve_slo_s(self, model: Optional[str], priority: int) -> float:
+        """The SLO budget for one (tenant, QoS class): the class table
+        first (tenant-specific beats wildcard), then the default."""
+        for key in ((model, priority), (None, priority)):
+            if key in self.slo_by_class:
+                return float(self.slo_by_class[key])
+        return float(self.slo_s) if self.slo_s is not None else math.inf
+
+    def service_estimate_s(self, sig: tuple) -> float:
+        """The signature's observed service-time EWMA (initially
+        ``service_s``) — the deterministic input to shed decisions and
+        deadline tightening."""
+        return self._svc_s.get(sig, self.service_s)
+
+    def ladder_multiples(self, sig: tuple) -> List[int]:
+        """Current rung geometry of one signature, in base-bucket
+        multiples (bench/test introspection)."""
+        nb, _ = sig
+        return [b.n_pad // nb for b in self._ladders.get(sig, [])]
 
     def ladder_for(self, req: Request) -> Tuple[tuple, List[BucketBudget]]:
         """Map a request to its signature key and budget ladder.
@@ -241,6 +430,50 @@ class StreamScheduler:
         if self.prewarm == "eager":
             self._warm_ladder(ladder, req)
         return key, ladder
+
+    def _refit_ladder(self, sig: tuple) -> None:
+        """Re-fit one signature's rung geometry to its observed flush-size
+        histogram: keep the rung multiples traffic actually needed, open
+        ones it asked for between old rungs, close the rest.  Invariants
+        (property-tested): the top rung stays exactly ``capacity`` (so
+        admission capacity never shrinks), geometry stays sorted, every
+        multiple stays in ``[1, capacity]``, and at most ``max_rungs``
+        survive.  Open buckets keep their captured ladder object, so a
+        refit never strands an in-flight batch."""
+        obs = self._obs_multiples.get(sig)
+        if not obs:
+            return
+        nb, eb = sig
+        ks = sorted({min(max(int(k), 1), self.capacity) for k in obs})
+        if self.capacity not in ks:
+            ks.append(self.capacity)
+        if len(ks) > self.max_rungs:
+            # evenly-spaced quantiles of the observed set, endpoints pinned
+            idx = np.linspace(0, len(ks) - 1, self.max_rungs).round().astype(int)
+            ks = sorted({ks[i] for i in idx})
+        self._ladders[sig] = [
+            BucketBudget(n_pad=k * nb, e_pad=k * eb, g_pad=2 * k) for k in ks
+        ]
+        self._obs_multiples[sig] = []
+
+    def _observe_flush(self, sig: tuple, bucket: _OpenBucket, dt: float) -> None:
+        """Fold one flush into the signature's service-time EWMA and (when
+        adaptive) its rung-demand histogram, refitting on a full window."""
+        prev = self._svc_s.get(sig)
+        self._svc_s[sig] = dt if prev is None else 0.5 * prev + 0.5 * dt
+        if not self.adapt_ladder:
+            return
+        nb, eb = sig
+        ideal = max(
+            -(-bucket.n_used // nb),  # ceil div
+            -(-bucket.e_used // eb),
+            -(-len(bucket.requests) // 2),
+            1,
+        )
+        window = self._obs_multiples.setdefault(sig, [])
+        window.append(min(ideal, self.capacity))
+        if len(window) >= self.refit_every:
+            self._refit_ladder(sig)
 
     def _warm_ladder(self, ladder: Sequence[BucketBudget], req: Request) -> None:
         """Compile every rung of a ladder for this request's tenant before
@@ -273,20 +506,28 @@ class StreamScheduler:
     # -------------------------------------------------------------- serving
 
     def run(self, graphs: Sequence[tuple], qps: float = 0.0,
-            models: Optional[Sequence[Optional[str]]] = None) -> StreamReport:
+            models: Optional[Sequence[Optional[str]]] = None,
+            priorities: Optional[Sequence[int]] = None,
+            arrivals: Optional[Sequence[float]] = None) -> StreamReport:
         """Serve a stream of raw COO graphs and account per-request latency.
 
-        ``qps`` > 0 offers request i at virtual time i/qps; ``qps`` <= 0
-        means the whole stream is already queued at t=0 (offline /
-        saturation mode).  ``models`` tags request i with a tenant name;
-        ``None`` entries (or omitting ``models``) route to the sole
-        tenant and are rejected up front when several are registered.
+        ``qps`` > 0 offers request i at virtual time i/qps after the
+        clock's start; ``qps`` <= 0 means the whole stream is already
+        queued at the start (offline / saturation mode); ``arrivals``
+        scripts explicit non-decreasing arrival timestamps instead (the
+        deterministic-simulation input).  ``models`` tags request i with
+        a tenant name; ``priorities`` assigns its QoS class (default 0).
         Compute time is real measured engine time; compile/warm time is
         excluded (tracked in the report).
         """
         if models is not None and len(models) != len(graphs):
             raise ValueError(
                 f"models ({len(models)}) must tag every graph ({len(graphs)})"
+            )
+        if priorities is not None and len(priorities) != len(graphs):
+            raise ValueError(
+                f"priorities ({len(priorities)}) must tag every graph "
+                f"({len(graphs)})"
             )
         if (self._default_model is None and len(self.executor.tenants) > 1
                 and (models is None or any(m is None for m in models))):
@@ -295,28 +536,56 @@ class StreamScheduler:
                 "pass models=[...] naming a registered tenant per graph "
                 f"(registered: {sorted(self.executor.tenants)})"
             )
-        requests = [
-            Request(rid=i, graph=g[:4],
-                    arrival_s=(i / qps if qps > 0 else 0.0),
-                    model=(models[i] if models is not None
-                           else self._default_model))
-            for i, g in enumerate(graphs)
-        ]
+        clock = self.clock if self.clock is not None else VirtualClock()
+        t0 = clock.now()
+        if arrivals is not None:
+            if len(arrivals) != len(graphs):
+                raise ValueError(
+                    f"arrivals ({len(arrivals)}) must stamp every graph "
+                    f"({len(graphs)})"
+                )
+            arr = [float(a) for a in arrivals]
+            if any(b < a for a, b in zip(arr, arr[1:])):
+                raise ValueError("arrivals must be non-decreasing")
+            if arr and arr[0] < t0:
+                raise ValueError(
+                    f"first arrival {arr[0]!r} predates the clock ({t0!r})"
+                )
+        else:
+            arr = [t0 + (i / qps if qps > 0 else 0.0) for i in range(len(graphs))]
+        requests = []
+        for i, g in enumerate(graphs):
+            model = models[i] if models is not None else self._default_model
+            priority = int(priorities[i]) if priorities is not None else 0
+            requests.append(Request(
+                rid=i, graph=g[:4], arrival_s=arr[i], model=model,
+                priority=priority,
+                slo_s=self.resolve_slo_s(model, priority),
+            ))
         compile_before = self.executor.compile_seconds
 
         open_buckets: Dict[tuple, _OpenBucket] = {}
         outputs: List[Optional[np.ndarray]] = [None] * len(requests)
-        latencies = np.zeros(len(requests))
+        latencies = np.full(len(requests), np.nan)
         batch_sizes: List[int] = []
         reasons: Counter = Counter()
-        device_free_s = 0.0
+        shed_list: List[Shed] = []
+        flush_log: List[FlushRecord] = []
+        device_free_s = t0
         compute_s = 0.0
-        last_done_s = 0.0
+        last_done_s = t0
+        deadline_misses = 0
+        queued = 0  # admitted-but-unflushed requests, across open buckets
+        bucket_seq = 0
 
         def flush(key: tuple, at_s: float, reason: str) -> None:
-            nonlocal device_free_s, compute_s, last_done_s
+            nonlocal device_free_s, compute_s, last_done_s, deadline_misses, queued
+            if at_s > clock.now():
+                clock.advance_to(at_s)
             bucket = open_buckets.pop(key)
-            outs, dt = self._execute(bucket)
+            queued -= len(bucket.requests)
+            rung = bucket.rung()
+            outs, dt = self._execute(bucket, rung)
             start_s = max(at_s, device_free_s)
             done_s = start_s + dt
             device_free_s = done_s
@@ -325,56 +594,110 @@ class StreamScheduler:
             for req, out in zip(bucket.requests, outs):
                 outputs[req.rid] = out
                 latencies[req.rid] = done_s - req.arrival_s
+                if done_s > req.deadline_s:
+                    deadline_misses += 1
             batch_sizes.append(len(bucket.requests))
             reasons[reason] += 1
+            model, priority, sig = key
+            flush_log.append(FlushRecord(
+                model=model, priority=priority, sig=sig,
+                rids=tuple(r.rid for r in bucket.requests), reason=reason,
+                at_s=at_s, start_s=start_s, done_s=done_s, compute_s=dt,
+                rung_multiple=rung.g_pad // 2,
+            ))
+            self._observe_flush(sig, bucket, dt)
 
         idx = 0
         while idx < len(requests) or open_buckets:
             next_arrival_s = requests[idx].arrival_s if idx < len(requests) else math.inf
-            ddl_key, ddl_s = None, math.inf
-            for k, b in open_buckets.items():
-                if b.deadline_s < ddl_s:
-                    ddl_key, ddl_s = k, b.deadline_s
             # a deadline only matters once the device could actually start
             # the batch: while the executor is backlogged, extra waiting is
-            # free, so keep the bucket open and let late arrivals pack in
-            # (this is what makes throughput plateau instead of collapse
-            # under overload)
-            eff_ddl_s = max(ddl_s, device_free_s) if ddl_key is not None else math.inf
-            if eff_ddl_s <= next_arrival_s:
-                flush(ddl_key, eff_ddl_s,
+            # free, so the bucket stays open and late arrivals pack in.
+            # Among buckets ready at the same effective instant, the
+            # highest-priority class wins the device (then bucket age) —
+            # a deterministic total order.
+            best_key, best_eff, best_rank = None, math.inf, None
+            for k, b in open_buckets.items():
+                eff = max(b.deadline_s, device_free_s)
+                rank = (eff, b.priority, b.seq)
+                if best_rank is None or rank < best_rank:
+                    best_key, best_eff, best_rank = k, eff, rank
+            if best_key is not None and best_eff <= next_arrival_s:
+                # "deadline" while arrivals remain — including one landing
+                # at exactly this instant (the expiry wins the tie and the
+                # arrival opens a fresh bucket) — "drain" once the offered
+                # stream is exhausted.
+                flush(best_key, best_eff,
                       "deadline" if idx < len(requests) else "drain")
                 continue
             req = requests[idx]
             idx += 1
+            clock.advance_to(req.arrival_s)
+            now = req.arrival_s
+            # ---- SLO-aware admission: shed rather than queue hopelessly.
+            # Projected delay = device backlog, plus one service estimate
+            # per already-open bucket (admitted work not in device_free_s
+            # yet, but each open bucket is one future flush that will
+            # occupy the device first), plus the flush this request would
+            # ride — already counted when its own bucket is open.
+            sig = self.executor.bucket_for(req.n, req.e)
+            svc_est = self.service_estimate_s(sig)
+            pending = sum(self.service_estimate_s(k[2]) for k in open_buckets)
+            own_open = (req.model, req.priority, sig) in open_buckets
+            projected = (max(0.0, device_free_s - now) + pending
+                         + (0.0 if own_open else svc_est))
+            if (math.isfinite(req.slo_s)
+                    and projected > req.slo_s * self.admit_margin):
+                shed_list.append(Shed(
+                    rid=req.rid, model=req.model, priority=req.priority,
+                    reason="backlog", at_s=now,
+                    projected_delay_s=projected, slo_s=req.slo_s,
+                ))
+                continue
+            if self.admit_limit is not None and queued >= self.admit_limit:
+                shed_list.append(Shed(
+                    rid=req.rid, model=req.model, priority=req.priority,
+                    reason="queue_full", at_s=now,
+                    projected_delay_s=projected, slo_s=req.slo_s,
+                ))
+                continue
             sig, ladder = self.ladder_for(req)
-            key = (req.model, sig)
+            key = (req.model, req.priority, sig)
             bucket = open_buckets.get(key)
             if bucket is not None and not bucket.admits(req):
-                flush(key, req.arrival_s, "budget")
+                flush(key, now, "budget")
                 bucket = None
             if bucket is None:
-                bucket = _OpenBucket(ladder, req.arrival_s, self.max_wait_s,
-                                     model=req.model)
+                bucket = _OpenBucket(ladder, now, self.max_wait_s,
+                                     model=req.model, priority=req.priority,
+                                     seq=bucket_seq)
+                bucket_seq += 1
                 open_buckets[key] = bucket
-            bucket.add(req)
+            bucket.add(req, service_est_s=svc_est)
+            queued += 1
             if bucket.full:
-                flush(key, req.arrival_s, "budget")
+                flush(key, now, "budget")
 
+        if last_done_s > clock.now():
+            clock.advance_to(last_done_s)
         return StreamReport(
             latencies_s=latencies,
-            outputs=[o for o in outputs],
+            outputs=outputs,
             batch_sizes=batch_sizes,
             flush_reasons=reasons,
             compute_s=compute_s,
-            makespan_s=max(last_done_s - (requests[0].arrival_s if requests else 0.0),
+            makespan_s=max(last_done_s - (requests[0].arrival_s if requests else t0),
                            1e-12),
             compile_s=self.executor.compile_seconds - compile_before,
+            shed=shed_list,
+            flush_log=flush_log,
+            deadline_misses=deadline_misses,
         )
 
     # ------------------------------------------------------------- internal
 
-    def _execute(self, bucket: _OpenBucket) -> Tuple[List[np.ndarray], float]:
+    def _execute(self, bucket: _OpenBucket,
+                 rung: Optional[BucketBudget] = None) -> Tuple[List[np.ndarray], float]:
         """Pack one open bucket on its smallest fitting rung and run it
         through the executor for the bucket's tenant.  The pack-time
         payload (padded graph, packed eigenvectors, host-built layout
@@ -383,7 +706,8 @@ class StreamScheduler:
         model = bucket.model
         tenant = self.executor.tenant(model)
         raws = [r.graph for r in bucket.requests]
-        rung = bucket.rung()
+        if rung is None:
+            rung = bucket.rung()
         vecs = None
         if self._needs_eigvec(model):
             vecs = [

@@ -10,6 +10,49 @@ def rng():
     return np.random.default_rng(0)
 
 
+def scripted_executor(service_s=0.001,
+                      buckets=((32, 96), (64, 192), (128, 384), (256, 768))):
+    """Executor stand-in with *scripted* service times, for deterministic
+    scheduler simulations: a real ``Executor`` subclass (so the scheduler
+    routes it as the multi-tenant surface) whose ``run`` returns the next
+    scripted duration instead of measuring anything — every flush
+    timestamp, shed decision, and latency in a ``VirtualClock`` run is
+    then an exact function of the input trace.
+
+    ``service_s`` is a constant, or a sequence consumed flush-by-flush
+    (the last entry repeats once exhausted).
+    """
+    import dataclasses as _dc
+
+    from repro.serve.executor import Executor
+
+    class ScriptedExecutor(Executor):
+        def __init__(self):
+            super().__init__(buckets=buckets)
+            cfg = _dc.make_dataclass("Cfg", ["model", "task"])("gin", "graph")
+            self.tenants["default"] = _dc.make_dataclass(
+                "FakeTenant", ["cfg", "share_layout"])(cfg, False)
+            self._script = (list(service_s)
+                            if isinstance(service_s, (list, tuple))
+                            else [float(service_s)])
+            self._calls = 0
+            self.run_log = []
+
+        def has_program(self, bucket_key, num_graphs, model=None):
+            return True  # nothing to compile: eager prewarm is a no-op
+
+        def warm(self, p, model=None):
+            return 0.0
+
+        def run(self, p, model=None):
+            dt = self._script[min(self._calls, len(self._script) - 1)]
+            self._calls += 1
+            self.run_log.append((p.bucket_key, p.num_graphs, dt))
+            return np.zeros((p.num_graphs, 1), np.float32), dt
+
+    return ScriptedExecutor()
+
+
 def random_molecule_batch(rng, n_graphs=4, n_pad=80, e_pad=160, feat=9, edge=3):
     from repro.core.graph import batch_graphs
 

@@ -63,21 +63,62 @@ def test_guard_resolves_module_and_name_aliases(tmp_path):
 def test_guard_allows_executor_consumers(tmp_path):
     ok = tmp_path / "fine_mode.py"
     ok.write_text(
-        "import time\n"
-        "def serve(executor, prepared, model):\n"
-        "    opened_at = time.time()         # wall-clock stamps are fine\n"
+        "from repro.serve.clock import VirtualClock\n"
+        "def serve(executor, prepared, model, clock):\n"
+        "    opened_at = clock.now()         # injected clock: the one way\n"
         "    out, dt = executor.run(prepared, model=model)\n"
         "    return out, dt, opened_at\n"
     )
     assert cesp.check_module(ok) == []
 
 
+def test_guard_flags_wall_clock_reads(tmp_path):
+    """``time.time`` used to be tolerated as a harmless stamp; since the
+    scheduler runs on the injectable Clock it is a determinism leak and
+    must be flagged in every form (attribute, from-import, alias)."""
+    bad = tmp_path / "wall_clock_mode.py"
+    bad.write_text(
+        "import time\n"
+        "import time as t\n"
+        "from time import time as wall\n"
+        "def admit(req):\n"
+        "    a = time.time()\n"
+        "    b = t.time()\n"
+        "    c = wall()\n"
+        "    return a, b, c\n"
+    )
+    errors = cesp.check_module(bad)
+    assert len(errors) == 3, errors
+    assert all("time" in e and "Clock" in e for e in errors)
+
+
+def test_clock_module_is_timing_exempt_but_compile_checked(tmp_path):
+    """serve/clock.py wraps the real clock, so its timing references are
+    sanctioned — but a jit path hiding in it must still fail."""
+    assert cesp.check_module(cesp.SERVE / "clock.py", allow_timing=True) == []
+    # the real clock module does reference time; without the exemption the
+    # guard sees it (so the exemption is load-bearing, not vacuous)
+    assert cesp.check_module(cesp.SERVE / "clock.py") != []
+    sneaky = tmp_path / "clocklike.py"
+    sneaky.write_text(
+        "import time, jax\n"
+        "def now():\n"
+        "    return time.monotonic()\n"
+        "def compile_here(fn):\n"
+        "    return jax.jit(fn)\n"
+    )
+    errors = cesp.check_module(sneaky, allow_timing=True)
+    assert len(errors) == 1 and "jit program construction" in errors[0]
+
+
 def test_gnn_serving_modules_are_actually_covered():
-    """The facade and scheduler must be in the guard's walk set (a rename
-    must not silently drop them from coverage)."""
+    """The facade, scheduler, and clock must be in the guard's walk set (a
+    rename must not silently drop them from coverage)."""
     walked = {p.name for p in cesp.SERVE.glob("*.py")
               if p.name != cesp.ALLOWED and p.name not in cesp.EXEMPT}
-    assert {"gnn_engine.py", "scheduler.py"} <= walked
+    assert {"gnn_engine.py", "scheduler.py", "clock.py"} <= walked
+    # clock.py's exemption is timing-only, never a full skip
+    assert "clock.py" not in cesp.EXEMPT and "clock.py" in cesp.TIMING_EXEMPT
 
 
 def test_guard_runs_as_script():

@@ -1,0 +1,224 @@
+"""Adaptive-ladder and admission invariants, property-style.
+
+The refit loop (``StreamScheduler._refit_ladder``) may reshape a
+signature's rung geometry arbitrarily often while a stream is live, so
+its safety conditions are stated as properties over arbitrary observation
+windows and arbitrary traces rather than hand-picked examples:
+
+  * geometry — after any refit the ladder is strictly increasing, every
+    rung multiple lies in ``[1, capacity]``, the top rung is pinned at
+    exactly ``capacity`` (admission capacity never shrinks), and at most
+    ``max_rungs`` rungs survive;
+  * admissibility — every graph size that fit the ladder before a refit
+    still admits to some rung after it (the pinned top rung guarantees
+    this; the property would catch un-pinning it);
+  * no stranding — a refit while buckets are open never loses a request:
+    every offered request is either served (finite latency, an output,
+    exactly one flush) or typed-shed, and ``served + shed == offered``.
+
+The deterministic seeded cases always run; when ``hypothesis`` is
+installed (requirements-dev.txt) the same properties are additionally
+fuzzed over randomly drawn windows and traces.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from conftest import scripted_executor
+from repro.core.batching import BucketBudget
+from repro.serve.scheduler import Request, StreamScheduler
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade to the seeded cases only
+    HAVE_HYPOTHESIS = False
+
+BASE_SIG = (32, 96)  # ScriptedExecutor's smallest single-graph bucket
+
+
+def make_graph(rng, n, e):
+    return (
+        rng.integers(0, n, e).astype(np.int32),
+        rng.integers(0, n, e).astype(np.int32),
+        rng.normal(size=(n, 4)).astype(np.float32),
+        rng.normal(size=(e, 3)).astype(np.float32),
+    )
+
+
+def fresh_scheduler(capacity=8, max_rungs=4, **kw):
+    kw.setdefault("adapt_ladder", True)
+    kw.setdefault("max_wait_s", 0.015625)
+    return StreamScheduler(scripted_executor(service_s=0.00390625),
+                           capacity=capacity, max_rungs=max_rungs, **kw)
+
+
+def assert_ladder_invariants(s, sig):
+    ks = s.ladder_multiples(sig)
+    assert ks, f"signature {sig} lost its ladder entirely"
+    assert ks == sorted(set(ks)), f"not strictly increasing: {ks}"
+    assert ks[0] >= 1 and ks[-1] == s.capacity, (
+        f"top rung must stay pinned at capacity={s.capacity}: {ks}")
+    # (len <= max_rungs holds only *post-refit* — the initially derived
+    # ladder may be longer; check_window asserts it where a refit ran)
+    nb, eb = sig
+    for k, b in zip(ks, s._ladders[sig]):
+        assert b == BucketBudget(n_pad=k * nb, e_pad=k * eb, g_pad=2 * k)
+
+
+def force_refit(s, sig, window):
+    """Install an observation window and refit, as the flush loop would."""
+    if sig not in s._ladders:  # derive the initial ladder once
+        rng = np.random.default_rng(0)
+        s.ladder_for(Request(rid=0, graph=make_graph(rng, 4, 4), arrival_s=0.0))
+    s._obs_multiples[sig] = list(window)
+    s._refit_ladder(sig)
+
+
+def check_window(window, capacity=8, max_rungs=4):
+    s = fresh_scheduler(capacity=capacity, max_rungs=max_rungs)
+    before = s._ladders  # (populated by force_refit's ladder_for)
+    force_refit(s, BASE_SIG, window)
+    assert_ladder_invariants(s, BASE_SIG)
+    ks = s.ladder_multiples(BASE_SIG)
+    assert len(ks) <= max_rungs
+    # admissibility: anything that fits the base bucket fits the ladder's
+    # smallest rung; anything admissible before (<= capacity multiples)
+    # fits the pinned top rung
+    nb, eb = BASE_SIG
+    top = s._ladders[BASE_SIG][-1]
+    assert top.admits(0, 0, 0, capacity * nb, capacity * eb)
+    # observed demand is representable: each clamped observation has a
+    # rung at or above it
+    for k in window:
+        want = min(max(int(k), 1), capacity)
+        assert any(r >= want for r in ks), (window, ks, want)
+    # the window is consumed — the next refit sees only fresh flushes
+    assert s._obs_multiples[BASE_SIG] == []
+    return before
+
+
+def check_trace(sizes, deltas, priorities, slo_s, refit_every, seed):
+    """End-to-end conservation on an arbitrary trace with refits live."""
+    rng = np.random.default_rng(seed)
+    graphs = [make_graph(rng, n, e) for n, e in sizes]
+    arrivals = [float(f"{t:.6f}") for t in np.cumsum(deltas)]
+    s = fresh_scheduler(capacity=4, max_rungs=3, refit_every=refit_every,
+                        slo_s=slo_s, service_s=0.001)
+    rep = s.run(graphs, arrivals=arrivals, priorities=priorities)
+
+    # conservation: every offered request is served xor typed-shed
+    assert rep.num_served + rep.num_shed == rep.num_requests == len(graphs)
+    shed_rids = {x.rid for x in rep.shed}
+    flushed_rids = [r for f in rep.flush_log for r in f.rids]
+    assert len(flushed_rids) == len(set(flushed_rids)), "double flush"
+    assert sorted(flushed_rids) == sorted(
+        set(range(len(graphs))) - shed_rids), "stranded or phantom request"
+    for i in range(len(graphs)):
+        served = i not in shed_rids
+        assert (rep.outputs[i] is not None) == served
+        assert np.isfinite(rep.latencies_s[i]) == served
+        if served:
+            assert rep.latencies_s[i] >= 0.0
+    assert sum(rep.batch_sizes) == rep.num_served
+    assert rep.deadline_misses <= rep.num_served
+    # whatever geometry the refits converged on is still well-formed
+    for sig in s._ladders:
+        assert_ladder_invariants(s, sig)
+    return rep
+
+
+# ---------------------------------------------------------- deterministic
+
+SEED_WINDOWS = [
+    [1],  # all-singleton demand: collapses to [1, capacity]
+    [1, 1, 2, 2, 3, 3],  # small spread
+    [8, 8, 8],  # demand saturates: [8] alone (top == only rung)
+    [5],  # a midpoint the derived ladder lacks
+    [1, 2, 3, 4, 5, 6, 7, 8],  # more distinct multiples than max_rungs
+    [0, -3, 99],  # out-of-range observations clamp, never crash
+    [3, 3, 3, 1, 7],
+]
+
+
+@pytest.mark.parametrize("window", SEED_WINDOWS, ids=[str(w) for w in SEED_WINDOWS])
+def test_refit_geometry_invariants(window):
+    check_window(window)
+
+
+def test_refit_with_empty_window_is_a_noop():
+    s = fresh_scheduler()
+    force_refit(s, BASE_SIG, [])
+    # derived geometry untouched: powers of two + 1.5x midpoints, top = 8
+    assert s.ladder_multiples(BASE_SIG) == [1, 2, 3, 4, 6, 8]
+
+
+def test_refit_respects_max_rungs_quantiles():
+    s = fresh_scheduler(capacity=8, max_rungs=3)
+    force_refit(s, BASE_SIG, [1, 2, 3, 4, 5, 6, 7, 8])
+    ks = s.ladder_multiples(BASE_SIG)
+    assert len(ks) <= 3 and ks[0] == 1 and ks[-1] == 8  # endpoints pinned
+
+
+SEED_TRACES = [
+    # (sizes, deltas_s, priorities, slo_s, refit_every, seed)
+    ([(8, 12)] * 10, [0.001] * 10, [0] * 10, None, 2, 0),
+    ([(8, 12), (40, 60), (100, 300), (8, 12)] * 3,
+     [0.0, 0.002, 0.0, 0.01] * 3, [0, 1, 0, 1] * 3, 0.05, 3, 1),
+    ([(16, 24)] * 20, [0.0] * 20, [i % 3 for i in range(20)], 0.02, 4, 2),
+    ([(200, 600)] * 5, [0.5] * 5, [0] * 5, 0.001, 1, 3),  # tight SLO
+    ([(4, 2)], [0.0], [7], None, 1, 4),  # single request, odd class
+]
+
+
+@pytest.mark.parametrize("case", SEED_TRACES, ids=[f"trace{i}" for i in range(len(SEED_TRACES))])
+def test_trace_conservation_under_live_refits(case):
+    check_trace(*case)
+
+
+def test_shed_plus_served_exhaustive_under_overload():
+    """2x-ish overload with a tight SLO: significant shedding, yet the
+    ledger still balances and nothing is double-counted."""
+    rep = check_trace(
+        sizes=[(24, 48)] * 40,
+        deltas=[0.0005] * 40,
+        priorities=[i % 2 for i in range(40)],
+        slo_s=0.01,
+        refit_every=2,
+        seed=5,
+    )
+    assert rep.num_shed > 0, "overload trace should shed"
+    assert rep.num_served > 0, "overload trace should still serve"
+
+
+# -------------------------------------------------------------- hypothesis
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=50, deadline=None)
+    @given(window=st.lists(st.integers(-2, 12), min_size=1, max_size=64),
+           capacity=st.integers(2, 16), max_rungs=st.integers(2, 6))
+    def test_refit_geometry_invariants_fuzzed(window, capacity, max_rungs):
+        check_window(window, capacity=capacity, max_rungs=max_rungs)
+
+    trace_strategy = st.lists(
+        st.tuples(
+            st.integers(3, 120),  # nodes
+            st.integers(2, 360),  # edges
+            st.floats(0.0, 0.02, allow_nan=False, allow_infinity=False),
+            st.integers(0, 2),  # QoS class
+        ),
+        min_size=1, max_size=24,
+    )
+
+    @settings(max_examples=25, deadline=None)
+    @given(trace=trace_strategy,
+           slo_s=st.one_of(st.none(), st.floats(0.001, 0.1)),
+           refit_every=st.integers(1, 6), seed=st.integers(0, 2**16))
+    def test_trace_conservation_fuzzed(trace, slo_s, refit_every, seed):
+        sizes = [(n, e) for n, e, _, _ in trace]
+        deltas = [d for _, _, d, _ in trace]
+        priorities = [p for _, _, _, p in trace]
+        check_trace(sizes, deltas, priorities, slo_s, refit_every, seed)

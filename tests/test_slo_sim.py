@@ -1,0 +1,383 @@
+"""Deterministic SLO-scheduler simulations on the VirtualClock.
+
+Every test scripts an arrival trace and a service-time script into the
+``scripted_executor`` fake, runs the real ``StreamScheduler`` event loop,
+and asserts **exact float equality** on flush timestamps, latencies,
+shed decisions, and priority ordering — no sleeps, no wall clock, no
+tolerance.  Timestamps are binary fractions (1/64, 1/256, ...) so every
+sum in the expectations is exact in float64; two runs of the same trace
+must be bitwise identical.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from conftest import scripted_executor
+from repro.serve.clock import RealClock, VirtualClock
+from repro.serve.scheduler import Shed, StreamScheduler
+
+MW = 0.015625  # max_wait_s = 1/64: binary-exact
+SVC = 0.00390625  # 1/256
+SLOW = 0.125  # 1/8
+
+
+def graph(n=8, e=12, feat=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.integers(0, n, e).astype(np.int32),
+        rng.integers(0, n, e).astype(np.int32),
+        rng.normal(size=(n, feat)).astype(np.float32),
+        rng.normal(size=(e, 3)).astype(np.float32),
+    )
+
+
+def sched(ex, **kw):
+    kw.setdefault("capacity", 4)
+    kw.setdefault("max_wait_s", MW)
+    return StreamScheduler(ex, **kw)
+
+
+# ------------------------------------------------------------ virtual clock
+
+
+def test_virtual_clock_is_explicit_and_monotone():
+    c = VirtualClock()
+    assert c.now() == 0.0
+    assert c.advance_to(1.5) == 1.5
+    assert c.advance(0.25) == 1.75
+    assert c.now() == 1.75
+    with pytest.raises(ValueError, match="backwards"):
+        c.advance_to(1.0)
+    with pytest.raises(ValueError, match="negative"):
+        c.advance(-0.1)
+    assert c.now() == 1.75  # failed advances leave time untouched
+
+
+def test_real_clock_moves_forward():
+    c = RealClock()
+    a = c.now()
+    assert c.now() >= a
+
+
+# ----------------------------------------------------- exact flush timing
+
+
+def test_exact_flush_times_and_latencies():
+    """Low load: one deadline flush, one drain flush, every timestamp an
+    exact function of the trace."""
+    ex = scripted_executor(service_s=SVC)
+    s = sched(ex)
+    arrivals = [0.0, 0.0009765625, 0.0625]  # 0, 1/1024, 1/16
+    rep = s.run([graph(seed=i) for i in range(3)], arrivals=arrivals)
+
+    assert rep.num_served == 3 and rep.num_shed == 0
+    f0, f1 = rep.flush_log
+    # bucket opened at t=0, deadline MW; device idle -> starts at MW
+    assert f0.rids == (0, 1) and f0.reason == "deadline"
+    assert (f0.at_s, f0.start_s, f0.done_s) == (MW, MW, MW + SVC)
+    # last arrival opens its own bucket; stream exhausted -> drain
+    assert f1.rids == (2,) and f1.reason == "drain"
+    assert (f1.at_s, f1.start_s, f1.done_s) == (
+        0.0625 + MW, 0.0625 + MW, 0.0625 + MW + SVC)
+    expect = np.array([
+        MW + SVC - 0.0,
+        MW + SVC - 0.0009765625,
+        MW + SVC,
+    ])
+    assert np.array_equal(rep.latencies_s, expect)  # exact, no tolerance
+    assert rep.flush_reasons == {"deadline": 1, "drain": 1}
+    assert rep.compute_s == 2 * SVC
+    assert rep.makespan_s == f1.done_s
+
+
+def test_simulation_is_bitwise_reproducible():
+    """Same trace, fresh scheduler + executor: identical report, bit for
+    bit (flush log, latencies incl. nan positions, shed decisions)."""
+    def once():
+        ex = scripted_executor(service_s=[SLOW, SVC, SVC])
+        s = sched(ex, slo_s=0.25, admit_limit=6)
+        graphs = [graph(n=6 + i % 9, e=9 + (i * 5) % 13, seed=i)
+                  for i in range(12)]
+        arrivals = [i * 0.0078125 for i in range(12)]  # i/128
+        priorities = [i % 2 for i in range(12)]
+        return s.run(graphs, arrivals=arrivals, priorities=priorities)
+
+    a, b = once(), once()
+    assert a.flush_log == b.flush_log
+    assert a.shed == b.shed
+    assert np.array_equal(a.latencies_s, b.latencies_s, equal_nan=True)
+    assert a.batch_sizes == b.batch_sizes
+    assert a.flush_reasons == b.flush_reasons
+    assert a.deadline_misses == b.deadline_misses
+    assert a.makespan_s == b.makespan_s
+
+
+def test_injected_clock_chains_runs_on_one_timeline():
+    clock = VirtualClock()
+    ex = scripted_executor(service_s=SVC)
+    s = sched(ex, clock=clock)
+    rep1 = s.run([graph()], arrivals=[0.0])
+    assert clock.now() == rep1.flush_log[0].done_s
+    # second run starts where the first finished; qps<=0 queues at now()
+    rep2 = s.run([graph(seed=1)])
+    assert rep2.flush_log[0].at_s == rep1.flush_log[0].done_s + MW
+
+
+def test_scripted_arrivals_are_validated():
+    ex = scripted_executor()
+    s = sched(ex)
+    with pytest.raises(ValueError, match="stamp every graph"):
+        s.run([graph(), graph(seed=1)], arrivals=[0.0])
+    with pytest.raises(ValueError, match="non-decreasing"):
+        s.run([graph(), graph(seed=1)], arrivals=[1.0, 0.5])
+    with pytest.raises(ValueError, match="predates the clock"):
+        s.run([graph()], arrivals=[-1.0], qps=0.0)
+
+
+# ------------------------------------------------------- priority ordering
+
+
+def test_priority_orders_flushes_when_both_ready():
+    """Two classes arrive together; with identical deadlines both buckets
+    are ready at the same instant and the higher-priority class (lower
+    number) takes the serial device first."""
+    ex = scripted_executor(service_s=SLOW)
+    s = sched(ex)
+    rep = s.run([graph(seed=0), graph(seed=1)], arrivals=[0.0, 0.0],
+                priorities=[1, 0])  # rid 0 is LOW priority, rid 1 HIGH
+    f0, f1 = rep.flush_log
+    assert f0.rids == (1,) and f0.priority == 0  # high class first
+    assert f1.rids == (0,) and f1.priority == 1
+    assert (f0.at_s, f0.done_s) == (MW, MW + SLOW)
+    # the low-priority bucket waited for the device, not its deadline
+    assert (f1.at_s, f1.start_s, f1.done_s) == (
+        MW + SLOW, MW + SLOW, MW + 2 * SLOW)
+    assert rep.latencies_s[1] < rep.latencies_s[0]
+
+
+def test_same_priority_ties_break_by_bucket_age():
+    """Equal class + equal readiness: the older bucket flushes first — a
+    deterministic total order, never dict iteration luck."""
+    ex = scripted_executor(service_s=SLOW)
+    s = sched(ex, capacity=1)  # budget (32, 96, 2): distinct sigs needed
+    # rid 0 -> bucket (32, 96); rid 1 -> bucket (64, 192): two open buckets
+    rep = s.run([graph(n=8, e=12), graph(n=40, e=60, seed=1)],
+                arrivals=[0.0, 0.0])
+    assert [f.rids for f in rep.flush_log] == [(0,), (1,)]
+
+
+# ------------------------------------------------ shedding / backpressure
+
+
+def test_backlog_shed_is_typed_and_exact():
+    ex = scripted_executor(service_s=SLOW)
+    s = sched(ex, slo_s=0.2)
+    arrivals = [0.0, 0.03125, 0.25]
+    rep = s.run([graph(seed=i) for i in range(3)], arrivals=arrivals)
+
+    # r0: deadline flush at MW, done MW + SLOW = 0.140625
+    assert rep.flush_log[0].done_s == MW + SLOW
+    # r1 arrives at 0.03125 with the device busy until 0.140625 and the
+    # signature's service EWMA now at SLOW: projected delay exceeds SLO
+    assert rep.shed == [Shed(
+        rid=1, model=None, priority=0, reason="backlog",
+        at_s=0.03125,
+        projected_delay_s=(MW + SLOW - 0.03125) + SLOW,
+        slo_s=0.2,
+    )]
+    assert rep.outputs[1] is None and math.isnan(rep.latencies_s[1])
+    # r2 arrives after the backlog cleared: served within SLO
+    assert rep.outputs[2] is not None
+    assert rep.deadline_misses == 0
+    assert rep.num_served + rep.num_shed == rep.num_requests == 3
+
+
+def test_queue_full_shed_bounds_admitted_queue():
+    ex = scripted_executor(service_s=SVC)
+    s = sched(ex, admit_limit=2, max_wait_s=1.0)
+    rep = s.run([graph(seed=i) for i in range(4)], arrivals=[0.0] * 4)
+    assert [x.rid for x in rep.shed] == [2, 3]
+    assert all(x.reason == "queue_full" for x in rep.shed)
+    assert rep.num_served == 2 and sum(rep.batch_sizes) == 2
+    assert rep.flush_log[0].rids == (0, 1)
+
+
+def test_backlog_shed_counts_admitted_unflushed_work():
+    """The projection must see work that is queued but not yet on the
+    device: every open bucket (distinct QoS classes here) is one future
+    flush, so arrivals project onto a growing pile even though
+    device_free is still t0."""
+    ex = scripted_executor()
+    s = sched(ex, capacity=1, max_wait_s=1.0, slo_s=0.25, service_s=0.125)
+    rep = s.run([graph(seed=i) for i in range(5)], arrivals=[0.0] * 5,
+                priorities=[0, 1, 2, 3, 4])
+    # rid0: nothing ahead, 1 x svc; rid1: one bucket + its own, exactly
+    # the SLO (<= admits); rid2 on: two buckets ahead -> 3 x svc, shed —
+    # and a shed opens no bucket, so the projection stays put
+    assert [x.rid for x in rep.shed] == [2, 3, 4]
+    assert all(x.reason == "backlog" for x in rep.shed)
+    assert [x.projected_delay_s for x in rep.shed] == [0.125 * 3] * 3
+    assert rep.num_served == 2
+
+
+def test_admit_margin_guard_band_sheds_earlier():
+    """margin=0.5 halves the usable budget: a projection that exactly
+    equals the SLO admits at margin 1.0 but sheds at 0.5 — deadline
+    accounting still uses the full SLO."""
+    def trace(margin):
+        ex = scripted_executor()
+        s = sched(ex, capacity=1, max_wait_s=1.0, slo_s=0.25,
+                  service_s=0.125, admit_margin=margin)
+        return s.run([graph(seed=0), graph(seed=1)], arrivals=[0.0, 0.0],
+                     priorities=[0, 1])
+
+    full = trace(1.0)
+    assert full.num_shed == 0  # rid1 projects exactly 0.25 == slo
+    guarded = trace(0.5)
+    assert [x.rid for x in guarded.shed] == [1]
+    assert guarded.shed[0].slo_s == 0.25  # the full SLO, not the band
+    with pytest.raises(ValueError, match="admit_margin"):
+        sched(scripted_executor(), admit_margin=0.0)
+
+
+def test_slo_by_class_beats_default_and_wildcard():
+    ex = scripted_executor()
+    s = sched(ex, slo_s=1.0,
+              slo_by_class={(None, 1): 0.5, ("default", 1): 0.25})
+    assert s.resolve_slo_s("default", 0) == 1.0  # default slo
+    assert s.resolve_slo_s("other", 1) == 0.5  # wildcard class row
+    assert s.resolve_slo_s("default", 1) == 0.25  # tenant-specific wins
+    s2 = sched(ex)
+    assert s2.resolve_slo_s("default", 0) == math.inf  # best-effort
+
+
+def test_best_effort_requests_are_never_shed():
+    """No SLO configured: arbitrarily deep backlog still admits (the
+    historical greedy behaviour is the slo_s=None special case)."""
+    ex = scripted_executor(service_s=SLOW)
+    s = sched(ex)
+    rep = s.run([graph(seed=i) for i in range(6)],
+                arrivals=[i * 0.0078125 for i in range(6)])
+    assert rep.num_shed == 0 and rep.num_served == 6
+
+
+def test_deadline_miss_is_counted_not_hidden():
+    """Admission was optimistic (no service estimate yet) but the flush
+    ran long: the served request misses its SLO and the report says so."""
+    ex = scripted_executor(service_s=SLOW)
+    s = sched(ex, slo_s=0.0625)
+    rep = s.run([graph()], arrivals=[0.0])
+    assert rep.num_served == 1 and rep.num_shed == 0
+    assert rep.latencies_s[0] == MW + SLOW  # > slo
+    assert rep.deadline_misses == 1
+
+
+def test_slo_tightens_bucket_deadline_below_max_wait():
+    """A request whose SLO minus the service estimate lands before
+    opened_at + max_wait must flush early enough to make it."""
+    ex = scripted_executor(service_s=[SVC, SVC])
+    s = sched(ex, slo_s=0.0078125, service_s=SVC)  # slo 1/128 < MW
+    rep = s.run([graph()], arrivals=[0.0])
+    f = rep.flush_log[0]
+    assert f.at_s == 0.0078125 - SVC  # deadline - service estimate
+    assert f.done_s == 0.0078125 - SVC + SVC == 0.0078125
+    assert rep.deadline_misses == 0
+
+
+# ------------------------------------------- flush-reason classification
+
+
+def test_deadline_vs_drain_at_exactly_deadline_arrival():
+    """An arrival landing at exactly a bucket's expiry: the expiry wins
+    the tie and is classified "deadline" (the stream is not exhausted);
+    the arrival then opens a fresh bucket whose flush is the "drain"."""
+    ex = scripted_executor(service_s=SVC)
+    s = sched(ex)
+    rep = s.run([graph(seed=0), graph(seed=1)], arrivals=[0.0, MW])
+    f0, f1 = rep.flush_log
+    assert f0.rids == (0,) and f0.reason == "deadline" and f0.at_s == MW
+    assert f1.rids == (1,) and f1.reason == "drain" and f1.at_s == 2 * MW
+
+
+def test_drain_only_when_stream_exhausted():
+    ex = scripted_executor(service_s=SVC)
+    s = sched(ex)
+    rep = s.run([graph(seed=i) for i in range(3)],
+                arrivals=[0.0, 0.0625, 0.125])
+    assert [f.reason for f in rep.flush_log] == [
+        "deadline", "deadline", "drain"]
+
+
+# --------------------------------------------------- empty / all-shed runs
+
+
+def test_percentile_on_empty_report_is_nan_not_crash():
+    ex = scripted_executor()
+    rep = sched(ex).run([])
+    assert rep.num_requests == 0
+    assert math.isnan(rep.percentile_ms(50))
+    assert math.isnan(rep.percentile_ms(99))
+    assert rep.graphs_per_s == 0.0
+
+
+def test_percentile_when_everything_shed_is_nan():
+    """A non-empty offered stream can still serve nothing: the seeded
+    service estimate already exceeds the SLO, so every arrival sheds."""
+    ex = scripted_executor()
+    s = sched(ex, slo_s=0.001, service_s=0.01)
+    rep = s.run([graph(seed=i) for i in range(3)], arrivals=[0.0] * 3)
+    assert rep.num_shed == 3 and rep.num_served == 0
+    assert all(x.reason == "backlog" for x in rep.shed)
+    assert math.isnan(rep.percentile_ms(99))
+    assert rep.batch_sizes == [] and rep.flush_log == []
+
+
+# ----------------------------------------------------- adaptive ladder
+
+
+def test_adaptive_ladder_closes_unused_rungs_deterministically():
+    ex = scripted_executor(service_s=SVC)
+    s = sched(ex, capacity=8, adapt_ladder=True, refit_every=3)
+    sig = (32, 96)
+    # widely spaced singleton flushes: observed demand is all 1x
+    rep = s.run([graph(seed=i) for i in range(3)],
+                arrivals=[0.0, 0.25, 0.5])
+    assert rep.num_served == 3
+    # the derived ladder was 1,2,3,4,6,8; after a full window of 1x
+    # demand only the hit rung and the pinned top survive
+    assert s.ladder_multiples(sig) == [1, 8]
+    # traffic is still admissible and still served after the refit
+    rep2 = s.run([graph(seed=9)], arrivals=[0.0])
+    assert rep2.num_served == 1 and rep2.flush_log[0].rung_multiple == 1
+
+
+def test_refit_never_strands_an_open_bucket():
+    """A refit triggered while another signature's bucket is open must
+    not break that bucket's flush (it keeps its captured ladder)."""
+    ex = scripted_executor(service_s=SVC)
+    s = sched(ex, capacity=8, adapt_ladder=True, refit_every=2,
+              max_wait_s=1.0)
+    small = [graph(seed=i) for i in range(3)]  # sig (32, 96)
+    big = graph(n=40, e=60, seed=7)  # sig (64, 192): its own open bucket
+    rep = s.run([big, small[0], small[1], small[2]],
+                arrivals=[0.0, 0.0, 0.25, 0.5])
+    # smalls flush twice (refit fires in between); big drains at the end
+    assert rep.num_served == 4
+    assert rep.num_served + rep.num_shed == 4
+    assert sorted(r for f in rep.flush_log for r in f.rids) == [0, 1, 2, 3]
+
+
+def test_adaptive_ladder_opens_observed_midpoints():
+    """Demand that lands between derived rungs (5x) gets its own rung
+    after the refit window — close what traffic never hits, open what it
+    does."""
+    ex = scripted_executor(service_s=SVC)
+    s = sched(ex, capacity=8, adapt_ladder=True, refit_every=2,
+              max_wait_s=1.0)
+    # 10 graphs of 16 nodes / 24 edges = 160 nodes -> ideal multiple 5
+    batch = [graph(n=16, e=24, seed=i) for i in range(10)]
+    rep = s.run(batch + batch, arrivals=[0.0] * 10 + [2.0] * 10)
+    assert rep.num_served == 20
+    assert 5 in s.ladder_multiples((32, 96))
+    assert s.ladder_multiples((32, 96))[-1] == 8  # top rung pinned

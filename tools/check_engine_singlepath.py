@@ -1,24 +1,32 @@
 """Guard: the serving stack has ONE timing/compile path — ``serve/executor.py``.
 
-The executor refactor's invariant is that ``time.perf_counter`` timing and
-``jax.jit`` program construction exist exactly once in the GNN serving
-stack (the executor's warm-before-timing path), so no serving mode can
-quietly grow its own compile cache or timed region again — the drift that
-produced the old mode x axis matrix, where every new axis had to be
-hand-threaded through ``infer_stream`` / ``infer_batched`` /
-``infer_packed`` separately.
+The executor refactor's invariant is that real-time reads and ``jax.jit``
+program construction exist exactly once in the GNN serving stack (the
+executor's warm-before-timing path), so no serving mode can quietly grow
+its own compile cache or timed region again — the drift that produced
+the old mode x axis matrix, where every new axis had to be hand-threaded
+through ``infer_stream`` / ``infer_batched`` / ``infer_packed``
+separately.  Since the SLO scheduler landed, the invariant is stricter:
+scheduling logic runs entirely on the injectable ``serve/clock.py``
+``Clock``, so *any* reference to the ``time`` module — including
+wall-clock stamps via ``time.time`` — outside the executor and the clock
+module is a determinism leak, not just a stray timer.
 
 This checker walks every module under ``src/repro/serve/`` and fails on
 any *reference* (not just call — aliasing counts) to:
 
-  * ``time.perf_counter`` / ``perf_counter`` / ``time.monotonic`` — a
-    private timed region;
+  * ``time.perf_counter`` / ``time.monotonic`` / ``time.time`` (and
+    their ``from time import ...`` forms) — a private timed region or a
+    wall-clock read that would make scheduling non-reproducible;
   * ``jax.jit`` / bare ``jit`` (imported from jax) / ``pjit`` — a private
     compile path;
 
-outside ``serve/executor.py``.  Exemptions:
+outside the sanctioned files.  Exemptions:
 
-  * ``serve/executor.py`` itself — the one sanctioned path;
+  * ``serve/executor.py`` — the one timing *and* compile path;
+  * ``serve/clock.py`` — timing only: it wraps the real clock behind the
+    injectable ``Clock`` interface (it is still checked for compile
+    references — the clock must never grow a jit path);
   * ``serve/engine.py`` — the LM prefill/decode server, a separate
     serving stack that predates the GNN executor and shares none of its
     bucket machinery (tracked as its own surface, not a GNN mode).
@@ -37,9 +45,10 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 SERVE = ROOT / "src" / "repro" / "serve"
 ALLOWED = "executor.py"  # the one timing/compile path
+TIMING_EXEMPT = {"clock.py"}  # the Clock interface: timing yes, compile no
 EXEMPT = {"engine.py"}  # the LM server: a separate, pre-executor stack
-TIMING_ATTRS = {"perf_counter", "monotonic"}  # of the time module
-TIMING_NAMES = {"perf_counter", "monotonic"}  # `from time import ...`
+TIMING_ATTRS = {"perf_counter", "monotonic", "time"}  # of the time module
+TIMING_NAMES = {"perf_counter", "monotonic", "time"}  # `from time import ...`
 COMPILE_ATTRS = {"jit", "pjit"}  # of the jax module chain
 COMPILE_NAMES = {"jit", "pjit"}  # bare `from jax import jit`
 TIMING_MODULES = {"time"}
@@ -74,7 +83,10 @@ def _bound_names(tree: ast.AST):
     return time_mods, jax_mods, names
 
 
-def check_module(path: Path) -> list[str]:
+def check_module(path: Path, allow_timing: bool = False) -> list[str]:
+    """All violations in one module.  ``allow_timing`` skips the timing
+    rules (for ``serve/clock.py``, which wraps the real clock) but never
+    the compile rules."""
     try:
         rel = path.relative_to(ROOT)
     except ValueError:  # e.g. a tmp file under test
@@ -86,24 +98,27 @@ def check_module(path: Path) -> list[str]:
     time_mods, jax_mods, from_names = _bound_names(tree)
     errors = []
     for node in ast.walk(tree):
-        bad = None
+        bad = hint = None
         if isinstance(node, ast.Attribute):
             root = _attr_root(node)
             if node.attr in TIMING_ATTRS and root in time_mods:
-                bad = f"time.{node.attr} timing"
+                bad, hint = f"time.{node.attr} timing", "timing"
             elif node.attr in COMPILE_ATTRS and root in jax_mods:
-                bad = f"jax.{node.attr} program construction"
+                bad, hint = f"jax.{node.attr} program construction", "compile"
         elif isinstance(node, ast.Name):
             origin = from_names.get(node.id)
             if origin in TIMING_NAMES:
-                bad = f"{origin} timing"
+                bad, hint = f"{origin} timing", "timing"
             elif origin in COMPILE_NAMES:
-                bad = f"{origin} program construction"
-        if bad is not None:
-            errors.append(
-                f"{rel}:{node.lineno}: {bad} outside serve/executor.py "
-                f"— route through the Executor's warm/run pipeline instead"
-            )
+                bad, hint = f"{origin} program construction", "compile"
+        if bad is None or (hint == "timing" and allow_timing):
+            continue
+        fix = ("route timestamps through an injected serve/clock.py Clock"
+               if hint == "timing"
+               else "route through the Executor's warm/run pipeline instead")
+        errors.append(
+            f"{rel}:{node.lineno}: {bad} outside serve/executor.py — {fix}"
+        )
     return errors
 
 
@@ -114,7 +129,7 @@ def main() -> int:
         if path.name == ALLOWED or path.name in EXEMPT:
             continue
         checked += 1
-        errors.extend(check_module(path))
+        errors.extend(check_module(path, allow_timing=path.name in TIMING_EXEMPT))
     for e in errors:
         print(f"ERROR: {e}")
     if not errors:
