@@ -32,6 +32,7 @@ import numpy as np
 from repro.data.pipeline import MOLHIV, MoleculeStream
 from repro.gnn import init
 from repro.gnn.models import paper_config
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.gnn_engine import GNNEngine
 from repro.serve.scheduler import StreamScheduler
 
@@ -86,11 +87,15 @@ def run(n_graphs: int = 256, strict: bool = True, smoke: bool = False):
     slo_s = max(0.02, 10.0 * mean_flush_s)
 
     # the guard band absorbs full-bucket flushes that legitimately insert
-    # ahead of a deadline-waiting batch after its members were admitted
+    # ahead of a deadline-waiting batch after its members were admitted.
+    # The attached registry double-counts nothing: StreamReport aggregates
+    # and registry counters are views over the same flush/shed events, and
+    # the consistency assert below pins that.
+    registry = MetricsRegistry()
     sched = StreamScheduler(
         eng, capacity=CAPACITY, max_wait_s=MAX_WAIT_S,
         slo_s=slo_s, admit_limit=4 * CAPACITY, admit_margin=ADMIT_MARGIN,
-        service_s=mean_flush_s,
+        service_s=mean_flush_s, metrics=registry,
     )
     warm_compile_s = eng.compile_seconds
 
@@ -121,11 +126,28 @@ def run(n_graphs: int = 256, strict: bool = True, smoke: bool = False):
     if 1.0 in by_frac:
         graceful = over.graphs_per_s >= 0.6 * by_frac[1.0].graphs_per_s
     no_recompiles = eng.compile_seconds == warm_compile_s
+    # -- telemetry consistency: the registry counts the sweep's events
+    # exactly as the reports do (two surfaces, one record stream).
+    # Always asserted — a divergence is a bookkeeping bug, not noise.
+    reps = list(by_frac.values())
+    reg_counts = tuple(int(registry.get(n).total()) for n in (
+        "serve_served_total", "serve_shed_total",
+        "serve_deadline_misses_total", "serve_flushes_total"))
+    rep_counts = (sum(r.num_served for r in reps),
+                  sum(r.num_shed for r in reps),
+                  sum(r.deadline_misses for r in reps),
+                  sum(len(r.flush_log) for r in reps))
+    assert reg_counts == rep_counts, (
+        f"registry {reg_counts} != StreamReport {rep_counts} for "
+        f"(served, shed, misses, flushes) — the two telemetry surfaces "
+        f"must be views over the same events"
+    )
     rows[0]["derived"].update({
         "p99_within_slo_at_2x": p99_ok,
         "graceful_degradation": graceful,
         "sheds_under_overload": sheds_under_overload,
         "recompile_s_after_warmup": round(eng.compile_seconds - warm_compile_s, 3),
+        "registry_consistent": reg_counts == rep_counts,
     })
     if strict:
         assert p99_ok, (

@@ -24,6 +24,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import default_registry
 from repro.kernels import ref
 from repro.kernels.edge_softmax import edge_softmax as _edge_softmax_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
@@ -37,6 +38,25 @@ _MODES = ("auto", "kernel", "reference")
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _record_dispatch(op: str, use_kernel: bool, interpret: bool,
+                     vmem_fallback: bool = False) -> None:
+    """Count one dispatch decision in the process-wide registry
+    (``kernels_dispatch_total{op, path}``).
+
+    These wrappers execute at *trace time* — once per compiled program,
+    never per served request — so the counter is a census of which path
+    each program actually lowered through (Pallas kernel, interpret-mode
+    kernel, jnp reference, or the VMEM-budget fallback), the serving-
+    side view of docs/KERNELS.md's fallback conditions.  A pure-Python
+    dict update at trace time: no new compile keys, nothing staged into
+    the program."""
+    path = ("vmem_fallback" if vmem_fallback
+            else "interpret" if use_kernel and interpret
+            else "kernel" if use_kernel
+            else "reference")
+    default_registry().counter("kernels_dispatch_total").inc(op=op, path=path)
 
 
 def _resolve(mode: str):
@@ -76,6 +96,7 @@ def segment_reduce(
     if perm is not None:
         values = jnp.take(values, perm, axis=0)
     use_kernel, interpret = _resolve(mode)
+    _record_dispatch("segment_reduce", use_kernel, interpret)
     if not use_kernel:
         return ref.segment_reduce_sorted_ref(values, segment_ids, num_segments, op)
     if op == "mean":
@@ -128,6 +149,7 @@ def fused_mp(
     plan's out-of-range padding ids do the masking.
     """
     use_kernel, interpret = _resolve(mode)
+    vmem_fallback = False
     if use_kernel and not interpret:
         resident = msrc.size * 4
         for wgt in (w1, w2):
@@ -135,6 +157,9 @@ def fused_mp(
                 resident += wgt.size * 4
         if resident > _FUSED_VMEM_BUDGET:
             use_kernel = False  # documented fallback: docs/KERNELS.md
+            vmem_fallback = True
+    _record_dispatch("fused_mp", use_kernel, interpret,
+                     vmem_fallback=vmem_fallback)
     if not use_kernel:
         return ref.fused_mp_ref(
             spec, ids_sorted, src_sorted, in_degree, node_mask, msrc, x_res,
@@ -157,6 +182,7 @@ def node_mlp(
 ) -> jax.Array:
     """Fused linear+bias+activation (NE PE)."""
     use_kernel, interpret = _resolve(mode)
+    _record_dispatch("node_mlp", use_kernel, interpret)
     if not use_kernel:
         return ref.node_mlp_ref(x, w, b, activation)
     return _node_mlp_kernel(x, w, b, activation, interpret=interpret)
@@ -177,6 +203,7 @@ def quant_node_mlp(
     (M, 1) f32 or None (dynamic per-node scales), b (N,) f32.
     """
     use_kernel, interpret = _resolve(mode)
+    _record_dispatch("quant_node_mlp", use_kernel, interpret)
     if not use_kernel:
         return ref.quant_node_mlp_ref(x_q, w_q, scale, b, activation,
                                       row_scale=row_scale)
@@ -200,6 +227,7 @@ def edge_softmax(
     if perm is not None:
         logits = jnp.take(logits, perm, axis=0)
     use_kernel, interpret = _resolve(mode)
+    _record_dispatch("edge_softmax", use_kernel, interpret)
     if not use_kernel:
         return ref.edge_softmax_ref(logits, segment_ids, num_segments)
     return _edge_softmax_kernel(logits, segment_ids, num_segments, interpret=interpret)
@@ -217,6 +245,7 @@ def flash_attention(
 ) -> jax.Array:
     """Blockwise GQA attention."""
     use_kernel, interpret = _resolve(mode)
+    _record_dispatch("flash_attention", use_kernel, interpret)
     if not use_kernel:
         return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
     return _flash_kernel(

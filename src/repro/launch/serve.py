@@ -14,7 +14,6 @@ Examples (CPU, reduced configs):
       --n-graphs 32 --qps 1000 --slo-ms 20
 """
 import argparse
-from collections import Counter
 
 import jax
 import numpy as np
@@ -71,10 +70,32 @@ def _priorities(args, n):
     return [cycle[i % len(cycle)] for i in range(n)]
 
 
-def _print_admission(rep):
-    print(f"  admission: served {rep.num_served}  shed {rep.num_shed} "
-          f"({dict(Counter(x.reason for x in rep.shed))}); "
-          f"deadline misses {rep.deadline_misses}")
+def _telemetry(args):
+    """(tracer, registry) for the stream paths.
+
+    The registry always exists — the admission ledger is a structured
+    record in it, rendered for humans by ``obs.export.admission_line``
+    (no more free-floating print tallies).  Span tracing only turns on
+    when ``--trace-out`` asks for the artifact."""
+    from repro.obs import MetricsRegistry, Tracer
+    from repro.serve.clock import VirtualClock
+
+    registry = MetricsRegistry()
+    tracer = Tracer(VirtualClock()) if args.trace_out else None
+    return tracer, registry
+
+
+def _emit_telemetry(args, tracer, registry):
+    """Print the admission ledger from the registry; write artifacts."""
+    from repro.obs import export
+
+    print(f"  {export.admission_line(registry)}")
+    if args.metrics_json:
+        export.write_metrics_json(registry, args.metrics_json)
+        print(f"  metrics-json -> {args.metrics_json}")
+    if args.trace_out:
+        export.write_trace(tracer, args.trace_out)
+        print(f"  trace-out -> {args.trace_out}")
 
 
 def serve_gnn_multitenant(args):
@@ -108,9 +129,11 @@ def serve_gnn_multitenant(args):
         ex.register(spec, cfg, params, precision=precision, calib_graphs=calib,
                     share_layout=not args.no_share_layout, fused=args.fused)
         specs.append(spec)
+    tracer, registry = _telemetry(args)
     sched = StreamScheduler(ex, capacity=args.pack,
                             max_wait_s=args.max_wait_ms * 1e-3,
-                            with_eigvec="auto", **_slo_kwargs(args))
+                            with_eigvec="auto", tracer=tracer,
+                            metrics=registry, **_slo_kwargs(args))
     graphs = [g[:4] for g in MoleculeStream(MOLHIV, seed=0).take(args.n_graphs)]
     models = [specs[i % len(specs)] for i in range(len(graphs))]
     rep = sched.run(graphs, qps=args.qps, models=models,
@@ -125,7 +148,7 @@ def serve_gnn_multitenant(args):
     print(f"  {len(rep.batch_sizes)} flushes (reasons {dict(rep.flush_reasons)}); "
           f"{len(ex._compiled)} compiled programs, "
           f"compile {rep.compile_s:.1f}s excluded")
-    _print_admission(rep)
+    _emit_telemetry(args, tracer, registry)
 
 
 def serve_gnn(args):
@@ -157,9 +180,11 @@ def serve_gnn(args):
     if args.stream:
         from repro.serve.scheduler import StreamScheduler
 
+        tracer, registry = _telemetry(args)
         sched = StreamScheduler(
             eng, capacity=args.pack, max_wait_s=args.max_wait_ms * 1e-3,
-            with_eigvec=(args.gnn == "dgn"), **_slo_kwargs(args),
+            with_eigvec=(args.gnn == "dgn"), tracer=tracer,
+            metrics=registry, **_slo_kwargs(args),
         )
         rep = sched.run(graphs, qps=args.qps,
                         priorities=_priorities(args, len(graphs)))
@@ -177,7 +202,7 @@ def serve_gnn(args):
         print(f"  {len(sizes)} flushes (mean batch {sizes.mean():.1f}, "
               f"reasons {dict(rep.flush_reasons)}); "
               f"compile {rep.compile_s:.1f}s excluded")
-        _print_admission(rep)
+        _emit_telemetry(args, tracer, registry)
         return
     if args.batched:
         outs, per_graph_s = eng.infer_batched(
@@ -236,6 +261,14 @@ def main():
                     help="stream: fraction of the SLO the admission "
                          "projection may use (guard band; see "
                          "serve/scheduler.py)")
+    ap.add_argument("--metrics-json", default="",
+                    help="stream: write the metrics-registry snapshot "
+                         "(repro-metrics/v1 JSON) here after the run")
+    ap.add_argument("--trace-out", default="",
+                    help="stream: write the run's Chrome/Perfetto "
+                         "trace-event JSON here (the scheduler's "
+                         "virtual-clock timeline; open in "
+                         "ui.perfetto.dev)")
     ap.add_argument("--adapt-ladder", action="store_true",
                     help="stream: re-fit each signature's bucket-rung "
                          "geometry to the observed flush-size histogram")

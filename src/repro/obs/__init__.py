@@ -1,0 +1,36 @@
+"""Serving telemetry: clock-driven tracing, a closed metrics catalog, and
+Prometheus / JSON / Perfetto exporters.
+
+The subsystem is dark by default — ``NULL_TRACER`` and ``metrics=None``
+are the defaults everywhere, provably free (no compile keys, no clock
+reads, identical flush logs; ``tests/test_obs.py``).  Attach a
+``Tracer`` (bound to the same injectable ``serve.clock.Clock`` the
+scheduler runs on) and a ``MetricsRegistry`` to light it up; see
+docs/OBSERVABILITY.md for the span taxonomy and metric catalog.
+"""
+from repro.obs.metrics import (
+    CATALOG,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    ServingInstruments,
+    default_registry,
+)
+from repro.obs.trace import NULL_TRACER, NullTracer, Span, Tracer
+from repro.obs import export
+
+__all__ = [
+    "CATALOG",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "ServingInstruments",
+    "default_registry",
+    "NULL_TRACER",
+    "NullTracer",
+    "Span",
+    "Tracer",
+    "export",
+]

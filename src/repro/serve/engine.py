@@ -8,7 +8,6 @@ throughout — the serving analogue of the GNN engine's bucketed padding.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import List, Optional
 
 import jax
@@ -17,6 +16,7 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.serve.clock import Clock, RealClock
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,10 +28,15 @@ class ServeConfig:
 
 
 class LMServer:
-    def __init__(self, params, cfg: ModelConfig, serve_cfg: ServeConfig):
+    def __init__(self, params, cfg: ModelConfig, serve_cfg: ServeConfig,
+                 clock: Optional[Clock] = None):
         self.params = params
         self.cfg = cfg
         self.scfg = serve_cfg
+        # All wall-time reads go through the injectable Clock — same rule
+        # as the GNN Executor, enforced by tools/check_engine_singlepath.py
+        # (this module is compile-exempt, not timing-exempt).
+        self.clock: Clock = clock if clock is not None else RealClock()
         self._prefill = jax.jit(
             lambda p, b: lm.prefill(p, b, cfg, serve_cfg.cache_len)
         )
@@ -52,20 +57,20 @@ class LMServer:
         batch = {"tokens": jnp.asarray(toks)}
         if extras:
             batch.update({k: jnp.asarray(v) for k, v in extras.items()})
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         cache, last_logits, t = self._prefill(self.params, batch)
         last_logits.block_until_ready()
-        prefill_s = time.perf_counter() - t0
+        prefill_s = self.clock.now() - t0
         out = np.zeros((scfg.max_batch, scfg.max_new_tokens), np.int32)
         tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)[:, None]
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         for i in range(scfg.max_new_tokens):
             out[:, i] = np.asarray(tok[:, 0])
             logits, cache = self._decode(self.params, cache, tok, t)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
             t = t + 1
         jax.block_until_ready(cache)
-        decode_s = time.perf_counter() - t0
+        decode_s = self.clock.now() - t0
         return out[:b], {
             "prefill_s": prefill_s,
             "decode_s_per_token": decode_s / scfg.max_new_tokens,

@@ -44,6 +44,16 @@ tenant's parameter-tree signature so one tenant's warmth is never
 mistaken for another's.  ``serve.gnn_engine.GNNEngine`` remains the
 single-tenant facade; ``serve.scheduler.StreamScheduler`` routes tagged
 requests to tenants and dispatches packed flushes per tenant.
+
+**Telemetry.**  The executor accepts ``tracer=`` / ``metrics=`` sinks
+(``repro.obs``; the scheduler attaches its own via
+:meth:`Executor.attach_telemetry`) and reports program builds, warm
+executions (with their untimed cost), and timed device seconds — the
+compile/warm events of the request lifecycle in docs/OBSERVABILITY.md.
+Both default off; disabled telemetry adds no compile keys and no time
+reads (the instrumentation stamps the *tracer's* clock, never a second
+real-time source — this module's injected ``clock`` remains the single
+place real time is measured).
 """
 from __future__ import annotations
 
@@ -56,6 +66,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import runtime as RT
+from repro.obs.metrics import MetricsRegistry, ServingInstruments
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serve.clock import Clock, RealClock
 from repro.core import batching as B
 from repro.core import graph as G
@@ -189,6 +201,8 @@ class Executor:
         mesh=None,
         rules: Optional[dict] = None,
         clock: Optional[Clock] = None,
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.buckets = sorted(buckets)
         self.mesh = mesh
@@ -200,6 +214,24 @@ class Executor:
         self.rules = rules
         self.tenants: Dict[str, Tenant] = {}
         self._compiled: Dict[tuple, _CompiledBucket] = {}
+        # telemetry sinks: dark by default (the no-op tracer / no registry
+        # costs nothing and adds no compile keys); the scheduler attaches
+        # its own sinks here so compile/warm/device events share them
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
+        self._mi = ServingInstruments(metrics) if metrics is not None else None
+
+    def attach_telemetry(self, tracer: Optional[Tracer] = None,
+                         metrics: Optional[MetricsRegistry] = None) -> None:
+        """Adopt telemetry sinks after construction (the scheduler passes
+        its own through here).  Sinks this executor already carries are
+        kept — first attachment wins, so two schedulers sharing one
+        executor never silently split its compile/warm accounting."""
+        if tracer is not None and not self.tracer.enabled:
+            self.tracer = tracer
+        if metrics is not None and self.metrics is None:
+            self.metrics = metrics
+            self._mi = ServingInstruments(metrics)
 
     # ---------------------------------------------------------- tenants
 
@@ -348,6 +380,12 @@ class Executor:
 
             cb = _CompiledBucket(fn=run, num_graphs=num_graphs)
             self._compiled[key] = cb
+            if self._mi is not None:
+                self._mi.programs_built.inc()
+            if self.tracer.enabled:
+                self.tracer.event("program_build", track="executor",
+                                  tenant=tenant.name, bucket=str(bucket_key),
+                                  num_graphs=num_graphs)
         if cb.num_graphs != num_graphs:  # pragma: no cover - key carries it
             raise AssertionError(
                 f"compile-cache record for {key} carries num_graphs="
@@ -366,6 +404,12 @@ class Executor:
         dt = self.clock.now() - t0
         cb.warm.add(sig)
         cb.compile_s += dt
+        if self._mi is not None:
+            self._mi.warms.inc()
+            self._mi.compile_seconds.inc(dt)
+        if self.tracer.enabled:
+            self.tracer.event("warm", track="executor",
+                              bucket=str(p.bucket_key), dur_s=dt)
         return dt
 
     # ---------------------------------------------------------- prepare
@@ -453,6 +497,12 @@ class Executor:
                 cb.fn(tenant.params, p.graph, p.eigvec, p.layout)
             )
             dt = self.clock.now() - t0
+        if self._mi is not None:
+            self._mi.device_seconds.inc(dt)
+        if self.tracer.enabled:
+            self.tracer.event("executor_run", track="executor",
+                              tenant=tenant.name, bucket=str(p.bucket_key),
+                              dur_s=dt)
         return np.asarray(out), dt
 
     # ------------------------------------------------------------- misc

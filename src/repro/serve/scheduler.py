@@ -77,6 +77,17 @@ a single serial executor: arrivals are offered at a configurable rate
 compute (measured wall time inside the executor), and the virtual clock
 folds the two together — so reported per-request latency includes
 queueing delay, which is what a latency-vs-throughput sweep needs.
+
+**Telemetry.**  Pass ``tracer=obs.Tracer(clock)`` / ``metrics=obs.
+MetricsRegistry()`` to record the full request lifecycle (admit/shed ->
+queue -> pack -> flush -> device -> unpack -> respond as spans on the
+run's clock timeline) and the serving counter catalog (sheds by reason,
+flushes by reason, latency histograms, queue depth, per-signature
+service EWMA — ``obs.metrics.CATALOG``).  Both default off; the no-op
+sink is provably free — identical flush log, zero extra compile keys,
+zero clock reads (``tests/test_obs.py``).  ``StreamReport``'s
+aggregates are views over the same flush/shed event records the
+registry is fed from, so the two surfaces agree by construction.
 """
 from __future__ import annotations
 
@@ -93,8 +104,17 @@ from repro.core.batching import (
     pack_prepared,
     unpack_outputs,
 )
+from repro.obs.metrics import MetricsRegistry, ServingInstruments
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serve.clock import Clock, VirtualClock
 from repro.serve.executor import Executor
+
+
+def _tenant_label(model: Optional[str]) -> str:
+    """Metric/trace label for a tenant: ``None`` (the sole tenant on a
+    bare executor) renders as ``"default"`` so label values are never
+    the string ``"None"``."""
+    return model if model is not None else "default"
 
 
 @dataclasses.dataclass
@@ -144,7 +164,11 @@ class Shed:
 @dataclasses.dataclass(frozen=True)
 class FlushRecord:
     """One flush event, fully timestamped on the virtual clock — the
-    deterministic audit trail the simulation tests assert against."""
+    deterministic audit trail the simulation tests assert against, and
+    the *primary record* every stream-level tally is a view over
+    (``StreamReport.batch_sizes`` / ``flush_reasons`` / ``compute_s`` /
+    ``deadline_misses`` are all derived from the flush log, never
+    counted in parallel)."""
 
     model: Optional[str]
     priority: int
@@ -156,6 +180,7 @@ class FlushRecord:
     done_s: float  # start_s + compute
     compute_s: float
     rung_multiple: int  # executed rung, in base-bucket multiples
+    misses: int = 0  # members whose done_s exceeded their SLO deadline
 
 
 @dataclasses.dataclass
@@ -165,18 +190,43 @@ class StreamReport:
     ``outputs`` / ``latencies_s`` are rid-ordered over every *offered*
     request; shed requests hold ``None`` / ``nan`` there and appear as
     typed :class:`Shed` entries in ``shed``.  Conservation always holds:
-    ``num_served + num_shed == num_requests``."""
+    ``num_served + num_shed == num_requests``.
+
+    The report stores only the primary event records — the flush log and
+    the shed list.  Every aggregate (``batch_sizes``, ``flush_reasons``,
+    ``compute_s``, ``deadline_misses``, the served/shed counts) is a
+    *view* derived from those records, never a parallel tally; when a
+    metrics registry is attached to the scheduler, the registry's
+    counters are fed from the same events, so the two surfaces agree by
+    construction (``benchmarks/bench_slo.py`` asserts the equality)."""
 
     latencies_s: np.ndarray  # (n_offered,) completion - arrival; nan if shed
     outputs: List[Optional[np.ndarray]]  # rid order; None for shed requests
-    batch_sizes: List[int]  # real graphs per flush, flush order
-    flush_reasons: Counter  # budget | deadline | drain
-    compute_s: float  # total engine compute across flushes
     makespan_s: float  # virtual time from first arrival to last completion
     compile_s: float  # warm/compile time (excluded from latencies)
     shed: List[Shed] = dataclasses.field(default_factory=list)
     flush_log: List[FlushRecord] = dataclasses.field(default_factory=list)
-    deadline_misses: int = 0  # admitted requests that finished past their SLO
+
+    @property
+    def batch_sizes(self) -> List[int]:
+        """Real graphs per flush, flush order (view over the flush log)."""
+        return [len(f.rids) for f in self.flush_log]
+
+    @property
+    def flush_reasons(self) -> Counter:
+        """budget | deadline | drain counts (view over the flush log)."""
+        return Counter(f.reason for f in self.flush_log)
+
+    @property
+    def compute_s(self) -> float:
+        """Total engine compute across flushes (view over the flush log)."""
+        return sum((f.compute_s for f in self.flush_log), 0.0)
+
+    @property
+    def deadline_misses(self) -> int:
+        """Admitted requests that finished past their SLO (view over the
+        flush log's per-flush miss counts)."""
+        return sum(f.misses for f in self.flush_log)
 
     @property
     def num_requests(self) -> int:
@@ -307,6 +357,28 @@ class StreamScheduler:
     service_s:    initial per-signature service-time estimate used by
                   admission / deadline tightening before the first flush
                   is observed (then an EWMA of measured flush compute).
+    svc_alpha:    EWMA coefficient of the per-signature service-time
+                  estimate: ``ewma = (1 - svc_alpha) * ewma + svc_alpha
+                  * observed`` per flush.  Default 0.5 (the historical
+                  half-life-of-one-flush behaviour); smaller = smoother
+                  admission projections under noisy compute, larger =
+                  faster tracking after a workload shift.  The live
+                  per-signature EWMA is exported as the
+                  ``serve_service_ewma_seconds{sig=...}`` gauge when a
+                  registry is attached.
+    tracer:       an ``obs.trace.Tracer`` recording the request
+                  lifecycle (admit/shed -> queue -> pack -> flush ->
+                  device -> unpack -> respond; docs/OBSERVABILITY.md).
+                  Default ``None`` = the shared no-op ``NULL_TRACER``
+                  (provably free: identical flush log, zero clock
+                  reads).  ``run`` rebinds the tracer's clock to the
+                  run's clock so span timestamps share the timeline.
+    metrics:      an ``obs.metrics.MetricsRegistry`` receiving the
+                  serving counters/gauges/histograms (the catalog in
+                  ``obs.metrics.CATALOG``).  Default ``None`` = off.
+                  Both sinks are also attached to the executor (if it
+                  has none yet) so compile/warm/device accounting lands
+                  in the same trace and registry.
     clock:        the time authority; ``None`` = a fresh deterministic
                   ``VirtualClock`` per ``run``.  Inject a shared clock to
                   chain runs on one timeline, or a ``RealClock`` to stamp
@@ -329,6 +401,9 @@ class StreamScheduler:
         refit_every: int = 64,
         max_rungs: int = 8,
         service_s: float = 0.0,
+        svc_alpha: float = 0.5,
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
         clock: Optional[Clock] = None,
     ):
         if capacity < 1:
@@ -353,6 +428,8 @@ class StreamScheduler:
             raise ValueError("refit_every must be >= 1")
         if max_rungs < 2:
             raise ValueError("max_rungs must be >= 2 (base + top)")
+        if not 0.0 < svc_alpha <= 1.0:
+            raise ValueError("svc_alpha must be in (0, 1]")
         self.prewarm = prewarm
         self.capacity = capacity
         self.max_wait_s = max_wait_s
@@ -365,6 +442,14 @@ class StreamScheduler:
         self.refit_every = refit_every
         self.max_rungs = max_rungs
         self.service_s = service_s
+        self.svc_alpha = svc_alpha
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
+        self._mi = ServingInstruments(metrics) if metrics is not None else None
+        if (tracer is not None or metrics is not None):
+            # compile/warm/device accounting lands in the same sinks; an
+            # executor that already carries its own telemetry keeps it
+            self.executor.attach_telemetry(tracer=tracer, metrics=metrics)
         self.clock = clock
         # signature key -> ascending budget ladder (custom or derived);
         # geometry is shared across tenants
@@ -455,12 +540,19 @@ class StreamScheduler:
             BucketBudget(n_pad=k * nb, e_pad=k * eb, g_pad=2 * k) for k in ks
         ]
         self._obs_multiples[sig] = []
+        if self._mi is not None:
+            self._mi.ladder_refits.inc(sig=f"{nb}x{eb}")
 
     def _observe_flush(self, sig: tuple, bucket: _OpenBucket, dt: float) -> None:
-        """Fold one flush into the signature's service-time EWMA and (when
-        adaptive) its rung-demand histogram, refitting on a full window."""
+        """Fold one flush into the signature's service-time EWMA (the
+        ``svc_alpha`` knob) and (when adaptive) its rung-demand
+        histogram, refitting on a full window."""
         prev = self._svc_s.get(sig)
-        self._svc_s[sig] = dt if prev is None else 0.5 * prev + 0.5 * dt
+        a = self.svc_alpha
+        self._svc_s[sig] = dt if prev is None else (1.0 - a) * prev + a * dt
+        if self._mi is not None:
+            self._mi.service_ewma.set(self._svc_s[sig],
+                                      sig=f"{sig[0]}x{sig[1]}")
         if not self.adapt_ladder:
             return
         nb, eb = sig
@@ -563,23 +655,25 @@ class StreamScheduler:
                 slo_s=self.resolve_slo_s(model, priority),
             ))
         compile_before = self.executor.compile_seconds
+        tr = self.tracer
+        if tr.enabled:
+            # span timestamps must share the run's timeline (the tracer
+            # may have been built before this run's clock existed)
+            tr.clock = clock
+        mi = self._mi
 
         open_buckets: Dict[tuple, _OpenBucket] = {}
         outputs: List[Optional[np.ndarray]] = [None] * len(requests)
         latencies = np.full(len(requests), np.nan)
-        batch_sizes: List[int] = []
-        reasons: Counter = Counter()
         shed_list: List[Shed] = []
         flush_log: List[FlushRecord] = []
         device_free_s = t0
-        compute_s = 0.0
         last_done_s = t0
-        deadline_misses = 0
         queued = 0  # admitted-but-unflushed requests, across open buckets
         bucket_seq = 0
 
         def flush(key: tuple, at_s: float, reason: str) -> None:
-            nonlocal device_free_s, compute_s, last_done_s, deadline_misses, queued
+            nonlocal device_free_s, last_done_s, queued
             if at_s > clock.now():
                 clock.advance_to(at_s)
             bucket = open_buckets.pop(key)
@@ -589,23 +683,50 @@ class StreamScheduler:
             start_s = max(at_s, device_free_s)
             done_s = start_s + dt
             device_free_s = done_s
-            compute_s += dt
             last_done_s = max(last_done_s, done_s)
+            misses = 0
             for req, out in zip(bucket.requests, outs):
                 outputs[req.rid] = out
                 latencies[req.rid] = done_s - req.arrival_s
                 if done_s > req.deadline_s:
-                    deadline_misses += 1
-            batch_sizes.append(len(bucket.requests))
-            reasons[reason] += 1
+                    misses += 1
             model, priority, sig = key
             flush_log.append(FlushRecord(
                 model=model, priority=priority, sig=sig,
                 rids=tuple(r.rid for r in bucket.requests), reason=reason,
                 at_s=at_s, start_s=start_s, done_s=done_s, compute_s=dt,
-                rung_multiple=rung.g_pad // 2,
+                rung_multiple=rung.g_pad // 2, misses=misses,
             ))
             self._observe_flush(sig, bucket, dt)
+            if tr.enabled:
+                tenant = _tenant_label(model)
+                for req in bucket.requests:
+                    tr.record("queue", req.arrival_s, at_s, track="scheduler",
+                              rid=req.rid, tenant=tenant, priority=priority)
+                tr.record("flush", at_s, done_s, track="scheduler",
+                          tenant=tenant, priority=priority, reason=reason,
+                          graphs=len(bucket.requests), sig=str(sig),
+                          rung=rung.g_pad // 2)
+                tr.record("device", start_s, done_s, track="device",
+                          tenant=tenant, graphs=len(bucket.requests),
+                          compute_s=dt)
+                for req in bucket.requests:
+                    tr.event("respond", t_s=done_s, track="scheduler",
+                             rid=req.rid, latency_s=done_s - req.arrival_s,
+                             miss=bool(done_s > req.deadline_s))
+            if mi is not None:
+                tenant = _tenant_label(model)
+                pr = str(priority)
+                mi.flushes.inc(reason=reason)
+                mi.flush_graphs.observe(len(bucket.requests))
+                mi.served.inc(len(bucket.requests), tenant=tenant, priority=pr)
+                if misses:
+                    mi.deadline_misses.inc(misses, tenant=tenant, priority=pr)
+                for req in bucket.requests:
+                    mi.latency.observe(done_s - req.arrival_s,
+                                       tenant=tenant, priority=pr)
+                mi.queue_depth.set(queued)
+                mi.open_buckets.set(len(open_buckets))
 
         idx = 0
         while idx < len(requests) or open_buckets:
@@ -646,20 +767,30 @@ class StreamScheduler:
             own_open = (req.model, req.priority, sig) in open_buckets
             projected = (max(0.0, device_free_s - now) + pending
                          + (0.0 if own_open else svc_est))
+            if mi is not None:
+                mi.requests.inc(tenant=_tenant_label(req.model),
+                                priority=str(req.priority))
+            shed_reason = None
             if (math.isfinite(req.slo_s)
                     and projected > req.slo_s * self.admit_margin):
+                shed_reason = "backlog"
+            elif self.admit_limit is not None and queued >= self.admit_limit:
+                shed_reason = "queue_full"
+            if shed_reason is not None:
                 shed_list.append(Shed(
                     rid=req.rid, model=req.model, priority=req.priority,
-                    reason="backlog", at_s=now,
+                    reason=shed_reason, at_s=now,
                     projected_delay_s=projected, slo_s=req.slo_s,
                 ))
-                continue
-            if self.admit_limit is not None and queued >= self.admit_limit:
-                shed_list.append(Shed(
-                    rid=req.rid, model=req.model, priority=req.priority,
-                    reason="queue_full", at_s=now,
-                    projected_delay_s=projected, slo_s=req.slo_s,
-                ))
+                if tr.enabled:
+                    tr.event("shed", t_s=now, track="scheduler", rid=req.rid,
+                             tenant=_tenant_label(req.model),
+                             priority=req.priority, reason=shed_reason,
+                             projected_delay_s=projected)
+                if mi is not None:
+                    mi.shed.inc(tenant=_tenant_label(req.model),
+                                priority=str(req.priority),
+                                reason=shed_reason)
                 continue
             sig, ladder = self.ladder_for(req)
             key = (req.model, req.priority, sig)
@@ -675,23 +806,32 @@ class StreamScheduler:
                 open_buckets[key] = bucket
             bucket.add(req, service_est_s=svc_est)
             queued += 1
+            if tr.enabled:
+                tr.event("admit", t_s=now, track="scheduler", rid=req.rid,
+                         tenant=_tenant_label(req.model),
+                         priority=req.priority, bucket=str(sig),
+                         projected_delay_s=projected)
+            if mi is not None:
+                mi.admitted.inc(tenant=_tenant_label(req.model),
+                                priority=str(req.priority))
+                mi.queue_depth.set(queued)
+                mi.open_buckets.set(len(open_buckets))
             if bucket.full:
                 flush(key, now, "budget")
 
         if last_done_s > clock.now():
             clock.advance_to(last_done_s)
+        if mi is not None:
+            mi.queue_depth.set(0)
+            mi.open_buckets.set(0)
         return StreamReport(
             latencies_s=latencies,
             outputs=outputs,
-            batch_sizes=batch_sizes,
-            flush_reasons=reasons,
-            compute_s=compute_s,
             makespan_s=max(last_done_s - (requests[0].arrival_s if requests else t0),
                            1e-12),
             compile_s=self.executor.compile_seconds - compile_before,
             shed=shed_list,
             flush_log=flush_log,
-            deadline_misses=deadline_misses,
         )
 
     # ------------------------------------------------------------- internal
@@ -714,8 +854,14 @@ class StreamScheduler:
                 np.asarray(self.executor._eigvec(s, r, nf.shape[0], nf.shape[0]))
                 for s, r, nf, _ in (g[:4] for g in raws)
             ]
-        prep, meta = pack_prepared(raws, rung, eigvecs=vecs,
-                                   with_layout=tenant.share_layout)
+        tr = self.tracer
+        with tr.span("pack", track="host", tenant=_tenant_label(model),
+                     graphs=len(raws), rung=rung.g_pad // 2):
+            prep, meta = pack_prepared(raws, rung, eigvecs=vecs,
+                                       with_layout=tenant.share_layout)
         out, dt = self.executor.run(prep, model=model)
         level = "graph" if tenant.cfg.task == "graph" else "node"
-        return unpack_outputs(out, meta, level=level), dt
+        with tr.span("unpack", track="host", tenant=_tenant_label(model),
+                     graphs=len(raws)):
+            outs = unpack_outputs(out, meta, level=level)
+        return outs, dt

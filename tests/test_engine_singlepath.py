@@ -112,13 +112,52 @@ def test_clock_module_is_timing_exempt_but_compile_checked(tmp_path):
 
 
 def test_gnn_serving_modules_are_actually_covered():
-    """The facade, scheduler, and clock must be in the guard's walk set (a
-    rename must not silently drop them from coverage)."""
-    walked = {p.name for p in cesp.SERVE.glob("*.py")
-              if p.name != cesp.ALLOWED and p.name not in cesp.EXEMPT}
-    assert {"gnn_engine.py", "scheduler.py", "clock.py"} <= walked
-    # clock.py's exemption is timing-only, never a full skip
-    assert "clock.py" not in cesp.EXEMPT and "clock.py" in cesp.TIMING_EXEMPT
+    """The facade, scheduler, clock, and LM engine must be in the guard's
+    walk set (a rename must not silently drop them from coverage)."""
+    walked = {p.name for p in cesp.SERVE.glob("*.py") if p.name != cesp.ALLOWED}
+    assert {"gnn_engine.py", "scheduler.py", "clock.py", "engine.py"} <= walked
+    # the exemptions are one-sided, never a full skip
+    assert "clock.py" not in cesp.COMPILE_EXEMPT
+    assert "clock.py" in cesp.TIMING_EXEMPT
+    assert "engine.py" in cesp.COMPILE_EXEMPT
+    assert "engine.py" not in cesp.TIMING_EXEMPT
+
+
+def test_lm_engine_is_compile_exempt_but_timing_checked(tmp_path):
+    """serve/engine.py keeps its own jit pair (a separate serving stack)
+    but must read wall time only through the injected Clock — the old
+    blanket exemption is gone, and a ``time`` read hiding in it fails."""
+    assert cesp.check_module(cesp.SERVE / "engine.py", allow_compile=True) == []
+    # the real engine does jit; without the exemption the guard sees it
+    # (so the exemption is load-bearing, not vacuous)
+    assert cesp.check_module(cesp.SERVE / "engine.py") != []
+    sneaky = tmp_path / "enginelike.py"
+    sneaky.write_text(
+        "import time, jax\n"
+        "def prefill(fn):\n"
+        "    return jax.jit(fn)\n"
+        "def stamp():\n"
+        "    return time.perf_counter()\n"
+    )
+    errors = cesp.check_module(sneaky, allow_compile=True)
+    assert len(errors) == 1 and "time.perf_counter timing" in errors[0]
+
+
+def test_obs_package_is_walked_with_full_rules(tmp_path):
+    """src/repro/obs/ is part of the guard's walk set with no exemptions:
+    the tracer reads time only through its injected Clock, so a rogue
+    ``time`` read or jit path in the telemetry layer must fail."""
+    obs_files = {p.name for p in cesp.OBS.glob("*.py")}
+    assert {"trace.py", "metrics.py", "export.py"} <= obs_files
+    for p in sorted(cesp.OBS.glob("*.py")):
+        assert cesp.check_module(p) == [], p.name
+    bad = tmp_path / "rogue_obs.py"
+    bad.write_text(
+        "import time\n"
+        "def span_now():\n"
+        "    return time.perf_counter()\n"
+    )
+    assert cesp.check_module(bad) != []
 
 
 def test_guard_runs_as_script():

@@ -27,9 +27,17 @@ outside the sanctioned files.  Exemptions:
   * ``serve/clock.py`` — timing only: it wraps the real clock behind the
     injectable ``Clock`` interface (it is still checked for compile
     references — the clock must never grow a jit path);
-  * ``serve/engine.py`` — the LM prefill/decode server, a separate
-    serving stack that predates the GNN executor and shares none of its
-    bucket machinery (tracked as its own surface, not a GNN mode).
+  * ``serve/engine.py`` — compile only: the LM prefill/decode server is a
+    separate serving stack with its own jitted prefill/decode programs,
+    but its wall-time reads go through the injected ``Clock`` like
+    everyone else's (it is still checked for timing references — the
+    guard hole it used to enjoy is closed).
+
+The telemetry package ``src/repro/obs/`` is walked with the full rules
+and no exemptions: spans and metrics may only read time through the
+``Tracer``'s injected Clock, so a VirtualClock simulation stays bitwise
+deterministic end to end, and the observability layer can never stage a
+compile path of its own.
 
 Exit code 1 with a per-reference report when anything times or compiles
 out of bounds.
@@ -44,9 +52,10 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 SERVE = ROOT / "src" / "repro" / "serve"
+OBS = ROOT / "src" / "repro" / "obs"
 ALLOWED = "executor.py"  # the one timing/compile path
 TIMING_EXEMPT = {"clock.py"}  # the Clock interface: timing yes, compile no
-EXEMPT = {"engine.py"}  # the LM server: a separate, pre-executor stack
+COMPILE_EXEMPT = {"engine.py"}  # the LM server: its own jit pair, no timing
 TIMING_ATTRS = {"perf_counter", "monotonic", "time"}  # of the time module
 TIMING_NAMES = {"perf_counter", "monotonic", "time"}  # `from time import ...`
 COMPILE_ATTRS = {"jit", "pjit"}  # of the jax module chain
@@ -83,10 +92,13 @@ def _bound_names(tree: ast.AST):
     return time_mods, jax_mods, names
 
 
-def check_module(path: Path, allow_timing: bool = False) -> list[str]:
+def check_module(path: Path, allow_timing: bool = False,
+                 allow_compile: bool = False) -> list[str]:
     """All violations in one module.  ``allow_timing`` skips the timing
     rules (for ``serve/clock.py``, which wraps the real clock) but never
-    the compile rules."""
+    the compile rules; ``allow_compile`` is the inverse (for
+    ``serve/engine.py``, whose prefill/decode jit pair is its own
+    sanctioned surface) and never skips the timing rules."""
     try:
         rel = path.relative_to(ROOT)
     except ValueError:  # e.g. a tmp file under test
@@ -111,7 +123,8 @@ def check_module(path: Path, allow_timing: bool = False) -> list[str]:
                 bad, hint = f"{origin} timing", "timing"
             elif origin in COMPILE_NAMES:
                 bad, hint = f"{origin} program construction", "compile"
-        if bad is None or (hint == "timing" and allow_timing):
+        if bad is None or (hint == "timing" and allow_timing) \
+                or (hint == "compile" and allow_compile):
             continue
         fix = ("route timestamps through an injected serve/clock.py Clock"
                if hint == "timing"
@@ -126,15 +139,22 @@ def main() -> int:
     errors = []
     checked = 0
     for path in sorted(SERVE.glob("*.py")):
-        if path.name == ALLOWED or path.name in EXEMPT:
+        if path.name == ALLOWED:
             continue
         checked += 1
-        errors.extend(check_module(path, allow_timing=path.name in TIMING_EXEMPT))
+        errors.extend(check_module(
+            path,
+            allow_timing=path.name in TIMING_EXEMPT,
+            allow_compile=path.name in COMPILE_EXEMPT,
+        ))
+    for path in sorted(OBS.glob("*.py")):
+        checked += 1
+        errors.extend(check_module(path))
     for e in errors:
         print(f"ERROR: {e}")
     if not errors:
-        print(f"engine-singlepath check OK ({checked} serve/ modules share "
-              f"the executor's one timing/compile path)")
+        print(f"engine-singlepath check OK ({checked} serve/ + obs/ modules "
+              f"share the executor's one timing/compile path)")
     return 1 if errors else 0
 
 

@@ -1,0 +1,56 @@
+"""Validate the telemetry artifacts a serve run wrote — CI's schema gate.
+
+Loads the ``--metrics-json`` snapshot and/or the ``--trace-out``
+trace-event JSON a ``repro.launch.serve`` stream run produced and
+validates them with the same ``obs.export`` validators the unit tests
+use: the metrics document must be ``repro-metrics/v1`` with every metric
+name in the closed ``obs.metrics.CATALOG`` (an unregistered name is a
+hard failure — the metric surface is an API), and the trace document
+must be well-formed Chrome/Perfetto trace events.  Exit 1 with the
+validator's per-defect message on any failure.
+
+  PYTHONPATH=src python tools/check_telemetry_artifacts.py \
+      --metrics-json /tmp/metrics.json --trace-out /tmp/trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs import export  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--metrics-json", help="repro-metrics/v1 snapshot to check")
+    ap.add_argument("--trace-out", help="Chrome trace-event JSON to check")
+    args = ap.parse_args(argv)
+    if not args.metrics_json and not args.trace_out:
+        ap.error("nothing to check: pass --metrics-json and/or --trace-out")
+
+    failures = 0
+    if args.metrics_json:
+        try:
+            doc = json.loads(Path(args.metrics_json).read_text())
+            n = export.validate_metrics_snapshot(doc)
+            print(f"metrics OK: {args.metrics_json} ({n} catalog metrics)")
+        except (OSError, ValueError) as err:
+            print(f"ERROR: metrics {args.metrics_json}: {err}")
+            failures += 1
+    if args.trace_out:
+        try:
+            doc = json.loads(Path(args.trace_out).read_text())
+            n = export.validate_trace_events(doc)
+            print(f"trace OK: {args.trace_out} ({n} events)")
+        except (OSError, ValueError) as err:
+            print(f"ERROR: trace {args.trace_out}: {err}")
+            failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
