@@ -1,0 +1,240 @@
+"""Async host/device pipelining: dispatch-ahead vs the serial flush loop.
+
+The serial scheduler alternates host and device: pack flush k, run it,
+block, pack k+1 — at capacity the device idles for the whole host gap
+(pack + eigvec + unpack + bookkeeping) between flushes.  The pipelined
+mode (``StreamScheduler(pipeline=...)``) dispatches ahead through a
+bounded in-flight window while a single modeled prepare worker packs the
+next flush under the running one.
+
+Methodology (honest on a 1-core CI box, where live threads cannot
+actually overlap): the *measured* inputs are real — per-flush device
+seconds from the serial saturation run and the serial host gap
+``g = (wall - device) / flushes`` measured around it — and the speedup
+claim is evaluated on the virtual timeline those costs are folded into:
+
+  * serial-modeled:    ``PipelineConfig(inflight=1, host_cost=g,
+    overlap=False)`` — each pack gates on the device going idle, which
+    is exactly the serial loop's inline-blocking host;
+  * pipelined-modeled: ``PipelineConfig(inflight=2, host_cost=g)`` — the
+    prepare worker packs ahead, the window dispatches ahead.
+
+Per-flush device time is re-measured live in both runs through the same
+executor path, so the comparison differs only in timeline placement.
+The expected ratio is ``(g + d) / max(g, d)`` for host gap g and flush
+compute d.  A live threaded ``PipelinedStream`` row is reported too
+(not gated — with one core the OS serializes the threads).
+
+Acceptance (asserted standalone, reported-only under the ``run`` driver):
+  * modeled pipelined throughput >= 1.5x modeled serial at saturation;
+  * unloaded (0.25x capacity) modeled p50 within 5% of serial-modeled;
+  * pipelined outputs bitwise-equal to the serial scheduler's for all
+    six models (gcn, gin, gin+vn, gat, pna, dgn);
+  * zero recompiles after warmup across the sweep;
+  * overlap fraction > 0 recorded from the pipelined run's trace.
+
+  PYTHONPATH=src python benchmarks/bench_pipeline.py [n_graphs] [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.data.pipeline import MOLHIV, MoleculeStream
+from repro.gnn import init
+from repro.gnn.models import paper_config
+from repro.obs import Tracer
+from repro.serve.clock import VirtualClock
+from repro.serve.gnn_engine import GNNEngine
+from repro.serve.pipeline import PipelineConfig, PipelinedStream, overlap_fraction
+from repro.serve.scheduler import StreamScheduler
+
+MODEL = "gin"
+CAPACITY = 8
+MAX_WAIT_S = 0.002
+PARITY_MODELS = (("gcn", False), ("gin", False), ("gin", True),
+                 ("gat", False), ("pna", False), ("dgn", False))
+
+
+def _reduced(model, vn):
+    base = dict(num_layers=2, virtual_node=vn)
+    if model == "gat":
+        base.update(heads=2, head_features=8)
+    elif model in ("pna", "dgn"):
+        base.update(hidden=16, head_hidden=(8,))
+    else:
+        base.update(hidden=16)
+    return paper_config(model, **base)
+
+
+def _parity_rows(graphs, smoke):
+    """Serial vs pipelined scheduler, bitwise, per model.  Reduced configs
+    keep the six-model sweep affordable; the executor path exercised is
+    identical to the full-size one."""
+    rows = []
+    models = PARITY_MODELS[:2] if smoke else PARITY_MODELS
+    for model, vn in models:
+        cfg = _reduced(model, vn)
+        eng = GNNEngine(cfg, init(jax.random.PRNGKey(0), cfg),
+                        buckets=((64, 128), (128, 256)))
+        eig = model == "dgn"
+        ser = StreamScheduler(eng, capacity=4, max_wait_s=MAX_WAIT_S,
+                              with_eigvec=eig).run(graphs)
+        pipe = StreamScheduler(eng, capacity=4, max_wait_s=MAX_WAIT_S,
+                               with_eigvec=eig,
+                               pipeline=PipelineConfig(inflight=2)).run(graphs)
+        bitwise = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(ser.outputs, pipe.outputs)
+        )
+        assert bitwise, f"{model}{'+vn' if vn else ''}: pipelined != serial"
+        rows.append({
+            "name": f"pipeline_parity_{model}{'_vn' if vn else ''}",
+            "graphs_per_s": round(pipe.graphs_per_s, 1),
+            "derived": {"bitwise_equal": bitwise,
+                        "flushes": len(pipe.flush_log)},
+        })
+    return rows
+
+
+def run(n_graphs: int = 256, strict: bool = True, smoke: bool = False):
+    graphs = MoleculeStream(MOLHIV, seed=0).take(n_graphs)
+    rows = _parity_rows(graphs[: min(n_graphs, 32)], smoke)
+
+    cfg = paper_config(MODEL)
+    eng = GNNEngine(cfg, init(jax.random.PRNGKey(0), cfg))
+    serial = StreamScheduler(eng, capacity=CAPACITY, max_wait_s=MAX_WAIT_S)
+    serial.run(graphs, qps=0.0)  # warmup: compiles every rung untimed
+    warm_compile_s = eng.compile_seconds
+
+    # -- serial saturation: measure the host gap the pipeline can hide.
+    # Best of two passes so a noisy-CPU spike can't skew the model inputs.
+    g = sat = None
+    for _ in range(2):
+        t0 = time.perf_counter()
+        rep = serial.run(graphs, qps=0.0)
+        wall = time.perf_counter() - t0
+        gap = max(0.0, wall - rep.compute_s) / max(len(rep.flush_log), 1)
+        if g is None or gap < g:
+            g, sat = gap, rep
+    d = sat.compute_s / max(len(sat.flush_log), 1)
+    cap_gps = sat.num_served / max(sat.compute_s, 1e-9)
+
+    def modeled(pipeline, qps):
+        s = StreamScheduler(eng, capacity=CAPACITY, max_wait_s=MAX_WAIT_S,
+                            pipeline=pipeline, clock=VirtualClock())
+        return s.run(graphs, qps=qps)
+
+    # -- the gated comparison: same measured costs, different placement
+    ser_m = modeled(PipelineConfig(inflight=1, host_cost=g, overlap=False),
+                    qps=0.0)
+    tr = Tracer(VirtualClock())
+    pipe_sched = StreamScheduler(eng, capacity=CAPACITY, max_wait_s=MAX_WAIT_S,
+                                 pipeline=PipelineConfig(inflight=2, host_cost=g),
+                                 clock=VirtualClock(), tracer=tr)
+    pipe_m = pipe_sched.run(graphs, qps=0.0)
+    speedup = ser_m.makespan_s / max(pipe_m.makespan_s, 1e-12)
+    frac = overlap_fraction(tr)
+
+    # -- unloaded: at 0.25x capacity the pipeline must not tax latency.
+    # Mean over all served requests (not p50 — a single flush's jitter),
+    # best of two passes per mode: each run re-measures live device time,
+    # so the comparison must average that noise out, not resample it.
+    def mean_lat(pipeline):
+        return min(
+            float(np.nanmean(modeled(pipeline, qps=0.25 * cap_gps).latencies_s))
+            for _ in range(2)
+        )
+
+    ser_lo = mean_lat(PipelineConfig(inflight=1, host_cost=g, overlap=False))
+    pipe_lo = mean_lat(PipelineConfig(inflight=2, host_cost=g))
+    lat_ratio = pipe_lo / max(ser_lo, 1e-9)
+
+    # -- depth sweep at saturation (modeled)
+    by_depth = {}
+    for depth in (1, 2, 4):
+        rep = modeled(PipelineConfig(inflight=depth, host_cost=g), qps=0.0)
+        by_depth[depth] = rep
+        rows.append({
+            "name": f"pipeline_{MODEL}_modeled_depth{depth}",
+            "graphs_per_s": round(rep.num_served / rep.makespan_s, 1),
+            "derived": {"makespan_ms": round(rep.makespan_s * 1e3, 2),
+                        "p99_ms": round(rep.percentile_ms(99), 2)},
+        })
+
+    # the zero-recompile acceptance covers the packed sweep above; the
+    # stream-mode section below compiles its own one-graph bucket
+    # programs, so it is warmed separately before anything is timed
+    no_recompiles = eng.compile_seconds == warm_compile_s
+    sweep_recompile_s = eng.compile_seconds - warm_compile_s
+
+    # -- live threaded run (reported, not gated: 1 CPU core serializes)
+    eng.infer_stream(graphs)  # warm every stream-mode bucket untimed
+    base_t0 = time.perf_counter()
+    eng.infer_stream(graphs)
+    serial_stream_wall = time.perf_counter() - base_t0
+    _, stats = PipelinedStream(eng.executor, model=eng.name,
+                               inflight=2).run(graphs)
+    speedup_ok = speedup >= 1.5
+    latency_ok = lat_ratio <= 1.05
+    overlap_ok = frac > 0.0
+    rows.insert(0, {
+        "name": f"pipeline_{MODEL}_speedup",
+        "graphs_per_s": round(pipe_m.num_served / pipe_m.makespan_s, 1),
+        "derived": {
+            "modeled_speedup_x": round(speedup, 3),
+            "host_gap_ms": round(g * 1e3, 3),
+            "mean_flush_ms": round(d * 1e3, 3),
+            "expected_bound_x": round((g + d) / max(g, d, 1e-9), 3),
+            "overlap_fraction": round(frac, 3),
+            "unloaded_lat_ratio": round(lat_ratio, 4),
+            "serial_modeled_gps": round(ser_m.num_served / ser_m.makespan_s, 1),
+            "live_stream_serial_gps": round(len(graphs) / serial_stream_wall, 1),
+            "live_stream_pipelined_gps": round(stats["graphs_per_s"], 1),
+            "live_peak_inflight": stats["peak_inflight"],
+            "recompile_s_after_warmup": round(sweep_recompile_s, 3),
+            "speedup_ok": speedup_ok,
+            "unloaded_latency_ok": latency_ok,
+        },
+    })
+    if strict:
+        assert speedup_ok, (
+            f"modeled pipelined speedup {speedup:.2f}x < 1.5x at saturation "
+            f"(host gap {g * 1e3:.2f}ms, flush {d * 1e3:.2f}ms) — "
+            f"dispatch-ahead is not hiding the host gap"
+        )
+        assert latency_ok, (
+            f"unloaded p50 ratio {lat_ratio:.3f} > 1.05 — pipelining must "
+            f"be free when the device is idle"
+        )
+        assert overlap_ok, "trace recorded no pack/device overlap"
+        assert no_recompiles, (
+            f"recompiles after warmup: compile_seconds moved "
+            f"{warm_compile_s:.3f} -> {eng.compile_seconds:.3f}"
+        )
+        # modeled depth-1 pipelining never beats depth-2 (window gates
+        # dispatch, not pack) and depth 4 adds nothing over 2 with one
+        # prepare worker + one device
+        assert by_depth[2].makespan_s <= by_depth[1].makespan_s + 1e-9
+    elif not (speedup_ok and latency_ok and overlap_ok and no_recompiles):
+        print(f"# WARNING: acceptance not met (speedup={speedup:.2f}x, "
+              f"lat_ratio={lat_ratio:.3f}, overlap={frac:.3f}, "
+              f"no_recompiles={no_recompiles})")
+    return rows
+
+
+def main(strict: bool = False):
+    smoke = "--smoke" in sys.argv
+    digits = [a for a in sys.argv[1:] if a.isdigit()]
+    n = int(digits[0]) if digits else (32 if smoke else 192)
+    rows = run(n, strict=strict, smoke=smoke)
+    for row in rows:
+        print(f"{row['name']},{row['graphs_per_s']},{row['derived']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(strict="--smoke" not in sys.argv)

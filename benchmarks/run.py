@@ -7,6 +7,7 @@ trajectory is tracked across PRs.  Sections:
   fig7   per-model GNN inference latency (engine vs dense-SpMM, stream vs batch)
   stream packed micro-batched streaming vs one-graph mode (QPS sweep)
   slo    SLO-aware admission: overload sweep (p99 holds, goodput plateaus)
+  pipeline  dispatch-ahead execution: modeled speedup vs serial host gap
   fig8   large-graph DGN (Cora/CiteSeer/PubMed sizes)
   fig9   NE/MP pipelining speed-ups (sweep + MolHIV + virtual node)
   table4 per-model resource footprint (params/FLOPs/bytes/VMEM tiles)
@@ -20,8 +21,8 @@ import sys
 
 def main() -> None:
     sections = sys.argv[1:] or [
-        "fig9", "table4", "fig8", "fig7", "stream", "slo", "quant", "layout",
-        "multitenant", "roofline"
+        "fig9", "table4", "fig8", "fig7", "stream", "slo", "pipeline",
+        "quant", "layout", "multitenant", "roofline"
     ]
     from benchmarks import (
         bench_fig7_latency,
@@ -29,6 +30,7 @@ def main() -> None:
         bench_fig9_pipeline,
         bench_layout,
         bench_multitenant,
+        bench_pipeline,
         bench_quant,
         bench_roofline,
         bench_slo,
@@ -44,6 +46,7 @@ def main() -> None:
         "table4": bench_table4_resources,
         "stream": bench_stream_throughput,
         "slo": bench_slo,
+        "pipeline": bench_pipeline,
         "quant": bench_quant,
         "layout": bench_layout,
         "multitenant": bench_multitenant,

@@ -123,6 +123,7 @@ def pack_prepared(
     budget: BucketBudget,
     eigvecs: Optional[Sequence[np.ndarray]] = None,
     with_layout: bool = True,
+    stage: bool = False,
 ):
     """Pack raw graphs and emit the whole pack-time payload as one
     ``serve.executor.PreparedBatch``: padded graph, packed eigenvectors,
@@ -132,7 +133,15 @@ def pack_prepared(
     compiled flush program receives everything ready-made (zero on-device
     sorts; the paper's convert-once-at-ingest, §3.4).  Returns
     ``(prepared, meta)`` — ``meta`` is the exact unpack bookkeeping.
+
+    ``stage=True`` additionally ``jax.device_put``s the prepared pytree —
+    the pipelined prepare worker uses this so the H2D copy for flush k+1
+    happens while the device runs flush k, off the dispatch critical
+    path (``PreparedBatch`` is a registered pytree; its static metadata
+    rides along untouched).
     """
+    import jax  # deferred with the executor import below
+
     from repro.serve import executor as X  # deferred: serve imports core
 
     packed, meta = pack_graphs(graphs, budget)
@@ -144,6 +153,8 @@ def pack_prepared(
         packed, eig, layout,
         ("packed", budget.n_pad, budget.e_pad, budget.g_pad), budget.g_pad,
     )
+    if stage:
+        prep = jax.device_put(prep)
     return prep, meta
 
 

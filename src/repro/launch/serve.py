@@ -53,6 +53,10 @@ def _slo_kwargs(args):
     cycles its classes over the stream round-robin."""
     kw = dict(admit_limit=args.admit_limit, admit_margin=args.admit_margin,
               adapt_ladder=args.adapt_ladder)
+    if args.pipeline:
+        from repro.serve.pipeline import PipelineConfig
+
+        kw["pipeline"] = PipelineConfig(inflight=args.inflight)
     if args.slo_ms:
         if ":" in args.slo_ms:
             kw["slo_by_class"] = {
@@ -272,6 +276,15 @@ def main():
     ap.add_argument("--adapt-ladder", action="store_true",
                     help="stream: re-fit each signature's bucket-rung "
                          "geometry to the observed flush-size histogram")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="stream: pipelined (dispatch-ahead) execution — "
+                         "flushes dispatch at their deadline while prior "
+                         "flushes are still in flight, host pack overlaps "
+                         "device compute (see docs/SERVING.md)")
+    ap.add_argument("--inflight", type=int, default=2,
+                    help="stream: bound on dispatched-but-unharvested "
+                         "flushes in pipelined mode (1 = serial dispatch "
+                         "order; default 2 = double buffering)")
     ap.add_argument("--gnn-mesh", type=int, default=1,
                     help="GNN: shard node/edge rows over this many devices")
     ap.add_argument("--fused", action="store_true",

@@ -81,6 +81,19 @@ CATALOG: Dict[str, Tuple[str, str, Tuple[str, ...]]] = {
         "counter", "Seconds spent compiling/warming, outside every timed region", ()),
     "serve_device_seconds_total": (
         "counter", "Seconds of timed device execution", ()),
+    "serve_d2h_seconds_total": (
+        "counter", "Seconds spent in device-to-host output transfer "
+        "(the unpack_d2h span at result harvest)", ()),
+    "serve_eigvec_cache_total": (
+        "counter", "Host eigvec-LRU lookups, by result (hit|miss)",
+        ("result",)),
+    # ---- pipeline: dispatch-ahead execution
+    "serve_inflight_depth": (
+        "gauge", "Dispatched-but-unharvested flushes in the pipelined "
+        "in-flight window", ()),
+    "serve_pack_ewma_seconds": (
+        "gauge", "Per-signature host-pack EWMA feeding pipelined admission "
+        "projection", ("sig",)),
     # ---- kernels: dispatch decisions (one per compiled program, at trace time)
     "kernels_dispatch_total": (
         "counter",
@@ -311,3 +324,7 @@ class ServingInstruments:
         self.warms = registry.counter("serve_warms_total")
         self.compile_seconds = registry.counter("serve_compile_seconds_total")
         self.device_seconds = registry.counter("serve_device_seconds_total")
+        self.d2h_seconds = registry.counter("serve_d2h_seconds_total")
+        self.eigvec_cache = registry.counter("serve_eigvec_cache_total")
+        self.inflight_depth = registry.gauge("serve_inflight_depth")
+        self.pack_ewma = registry.gauge("serve_pack_ewma_seconds")

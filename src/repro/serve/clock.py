@@ -36,9 +36,17 @@ import time
 class Clock:
     """Minimal time-source protocol: monotone seconds since an arbitrary
     epoch.  Durations are differences of ``now()`` readings; absolute
-    values are meaningless across clock instances."""
+    values are meaningless across clock instances.
+
+    ``advance_to`` is the event-loop hook: a simulated clock jumps to the
+    requested instant; a real clock cannot jump, so it reports where wall
+    time actually is — the scheduler's timeline then *stamps* live events
+    instead of scripting them."""
 
     def now(self) -> float:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def advance_to(self, t_s: float) -> float:  # pragma: no cover - interface
         raise NotImplementedError
 
 
@@ -48,6 +56,13 @@ class RealClock(Clock):
 
     def now(self) -> float:
         return time.perf_counter()
+
+    def advance_to(self, t_s: float) -> float:
+        """Live time cannot jump: the event loop's advance is a stamp.
+        Returns wall now — by the time the loop processes an event due at
+        ``t_s``, the wall clock is already there or past it, so the
+        scheduler's monotone-timeline invariant holds without sleeping."""
+        return self.now()
 
 
 class VirtualClock(Clock):

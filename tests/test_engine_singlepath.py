@@ -112,15 +112,65 @@ def test_clock_module_is_timing_exempt_but_compile_checked(tmp_path):
 
 
 def test_gnn_serving_modules_are_actually_covered():
-    """The facade, scheduler, clock, and LM engine must be in the guard's
+    """The facade, scheduler, clock, pipeline, LM engine — and since the
+    threading rule landed, the executor itself — must be in the guard's
     walk set (a rename must not silently drop them from coverage)."""
-    walked = {p.name for p in cesp.SERVE.glob("*.py") if p.name != cesp.ALLOWED}
-    assert {"gnn_engine.py", "scheduler.py", "clock.py", "engine.py"} <= walked
+    walked = {p.name for p in cesp.SERVE.glob("*.py")}
+    assert {"gnn_engine.py", "scheduler.py", "clock.py", "engine.py",
+            "pipeline.py", cesp.ALLOWED} <= walked
     # the exemptions are one-sided, never a full skip
     assert "clock.py" not in cesp.COMPILE_EXEMPT
     assert "clock.py" in cesp.TIMING_EXEMPT
     assert "engine.py" in cesp.COMPILE_EXEMPT
     assert "engine.py" not in cesp.TIMING_EXEMPT
+    assert cesp.THREADING_EXEMPT == {"pipeline.py"}
+    # the executor's timing/compile allowance never extends to threading
+    assert cesp.ALLOWED not in cesp.THREADING_EXEMPT
+    assert "pipeline.py" not in cesp.TIMING_EXEMPT
+    assert "pipeline.py" not in cesp.COMPILE_EXEMPT
+
+
+def test_guard_flags_threading_outside_pipeline(tmp_path):
+    """Worker threads anywhere but serve/pipeline.py are a determinism
+    leak: every import form of threading / _thread / concurrent.futures
+    must be flagged, and the exemption must be load-bearing."""
+    bad = tmp_path / "threaded_mode.py"
+    bad.write_text(
+        "import threading\n"
+        "import threading as th\n"
+        "import concurrent.futures\n"
+        "from concurrent import futures\n"
+        "from concurrent.futures import ThreadPoolExecutor\n"
+        "import _thread\n"
+        "def spawn(fn):\n"
+        "    return threading.Thread(target=fn)\n"
+    )
+    errors = cesp.check_module(bad)
+    assert len(errors) == 6, errors
+    assert all("threading surface" in e for e in errors)
+    # the exemption clears exactly the threading errors, nothing else
+    assert cesp.check_module(bad, allow_threading=True) == []
+    # the real pipeline module needs the exemption (it is load-bearing)
+    pipeline = cesp.SERVE / "pipeline.py"
+    assert cesp.check_module(pipeline) != []
+    assert cesp.check_module(pipeline, allow_threading=True) == []
+    # allow_threading grants nothing beyond threading
+    sneaky = tmp_path / "sneaky_pipeline.py"
+    sneaky.write_text(
+        "import time, jax\n"
+        "from concurrent.futures import ThreadPoolExecutor\n"
+        "def prep(fn):\n"
+        "    return jax.jit(fn), time.perf_counter()\n"
+    )
+    errors = cesp.check_module(sneaky, allow_threading=True)
+    assert len(errors) == 2, errors
+
+
+def test_executor_is_threading_checked():
+    """The executor keeps its timing/compile sanction but is walked for
+    the threading rule — dispatch-ahead must stay thread-free there."""
+    assert cesp.check_module(cesp.SERVE / cesp.ALLOWED,
+                             allow_timing=True, allow_compile=True) == []
 
 
 def test_lm_engine_is_compile_exempt_but_timing_checked(tmp_path):

@@ -33,11 +33,21 @@ outside the sanctioned files.  Exemptions:
     everyone else's (it is still checked for timing references — the
     guard hole it used to enjoy is closed).
 
+Since the pipelined execution mode landed, a third rule rides the same
+walk: **threading is single-path too**.  Any import of ``threading`` /
+``_thread`` / ``concurrent`` (including ``concurrent.futures``) outside
+``serve/pipeline.py`` fails — the pipelined prepare/dispatch worker is
+the one sanctioned threading surface, and everything else (scheduler,
+executor, clock, telemetry) must stay single-threaded so VirtualClock
+simulations remain bitwise deterministic.  ``serve/executor.py`` is NOT
+exempt from this rule: it is walked too, with only its historical
+timing/compile allowances.
+
 The telemetry package ``src/repro/obs/`` is walked with the full rules
 and no exemptions: spans and metrics may only read time through the
 ``Tracer``'s injected Clock, so a VirtualClock simulation stays bitwise
 deterministic end to end, and the observability layer can never stage a
-compile path of its own.
+compile path or a worker thread of its own.
 
 Exit code 1 with a per-reference report when anything times or compiles
 out of bounds.
@@ -56,12 +66,17 @@ OBS = ROOT / "src" / "repro" / "obs"
 ALLOWED = "executor.py"  # the one timing/compile path
 TIMING_EXEMPT = {"clock.py"}  # the Clock interface: timing yes, compile no
 COMPILE_EXEMPT = {"engine.py"}  # the LM server: its own jit pair, no timing
+THREADING_EXEMPT = {"pipeline.py"}  # the one sanctioned threading surface
 TIMING_ATTRS = {"perf_counter", "monotonic", "time"}  # of the time module
 TIMING_NAMES = {"perf_counter", "monotonic", "time"}  # `from time import ...`
 COMPILE_ATTRS = {"jit", "pjit"}  # of the jax module chain
 COMPILE_NAMES = {"jit", "pjit"}  # bare `from jax import jit`
 TIMING_MODULES = {"time"}
 COMPILE_MODULES = {"jax", "jax.experimental.pjit"}
+# any import of these module trees is a threading violation: you cannot
+# spawn a worker without importing one of them, so banning the import
+# (every form: plain, aliased, from-import, submodule) suffices
+THREADING_MODULES = {"threading", "_thread", "concurrent"}
 
 
 def _attr_root(node: ast.AST):
@@ -92,13 +107,29 @@ def _bound_names(tree: ast.AST):
     return time_mods, jax_mods, names
 
 
+def _threading_import(node: ast.AST):
+    """The offending module path when a node imports from a banned
+    threading module tree (root match: ``concurrent.futures`` counts)."""
+    if isinstance(node, ast.Import):
+        for alias in node.names:
+            if alias.name.split(".")[0] in THREADING_MODULES:
+                return alias.name
+    elif isinstance(node, ast.ImportFrom) and node.module is not None:
+        if node.module.split(".")[0] in THREADING_MODULES:
+            return node.module
+    return None
+
+
 def check_module(path: Path, allow_timing: bool = False,
-                 allow_compile: bool = False) -> list[str]:
+                 allow_compile: bool = False,
+                 allow_threading: bool = False) -> list[str]:
     """All violations in one module.  ``allow_timing`` skips the timing
     rules (for ``serve/clock.py``, which wraps the real clock) but never
     the compile rules; ``allow_compile`` is the inverse (for
     ``serve/engine.py``, whose prefill/decode jit pair is its own
-    sanctioned surface) and never skips the timing rules."""
+    sanctioned surface) and never skips the timing rules;
+    ``allow_threading`` skips the worker-thread import ban (for
+    ``serve/pipeline.py`` only) and skips nothing else."""
     try:
         rel = path.relative_to(ROOT)
     except ValueError:  # e.g. a tmp file under test
@@ -111,6 +142,14 @@ def check_module(path: Path, allow_timing: bool = False,
     errors = []
     for node in ast.walk(tree):
         bad = hint = None
+        mod = _threading_import(node)
+        if mod is not None and not allow_threading:
+            errors.append(
+                f"{rel}:{node.lineno}: import of {mod} outside "
+                f"serve/pipeline.py — the pipelined prepare/dispatch worker "
+                f"is the one sanctioned threading surface"
+            )
+            continue
         if isinstance(node, ast.Attribute):
             root = _attr_root(node)
             if node.attr in TIMING_ATTRS and root in time_mods:
@@ -139,13 +178,15 @@ def main() -> int:
     errors = []
     checked = 0
     for path in sorted(SERVE.glob("*.py")):
-        if path.name == ALLOWED:
-            continue
         checked += 1
+        # the executor is the sanctioned timing/compile path but gets no
+        # threading pass — it is walked like everyone else for that rule
+        sanctioned = path.name == ALLOWED
         errors.extend(check_module(
             path,
-            allow_timing=path.name in TIMING_EXEMPT,
-            allow_compile=path.name in COMPILE_EXEMPT,
+            allow_timing=sanctioned or path.name in TIMING_EXEMPT,
+            allow_compile=sanctioned or path.name in COMPILE_EXEMPT,
+            allow_threading=path.name in THREADING_EXEMPT,
         ))
     for path in sorted(OBS.glob("*.py")):
         checked += 1
@@ -154,7 +195,7 @@ def main() -> int:
         print(f"ERROR: {e}")
     if not errors:
         print(f"engine-singlepath check OK ({checked} serve/ + obs/ modules "
-              f"share the executor's one timing/compile path)")
+              f"share the executor's one timing/compile/threading path)")
     return 1 if errors else 0
 
 
