@@ -2,10 +2,16 @@
 
 Schema (consumed by perf-trajectory tooling; keep stable):
 
-    {"name": str, "config": dict, "metrics": list-of-rows, "timestamp": iso8601}
+    {"name": str, "config": dict, "metrics": list-of-rows,
+     "env": dict, "timestamp": iso8601}
 
 ``metrics`` is whatever row list the benchmark's ``run()`` produced (the
-same dicts its CSV lines print).  Output directory defaults to the current
+same dicts its CSV lines print).  ``env`` is the serving stack's
+environment fingerprint (``serve.aot.environment_fingerprint``: jax /
+jaxlib versions, backend, device kind, topology) — two BENCH files are
+only comparable when their fingerprints match, and the perf-trajectory
+tooling can now refuse to diff across a toolchain bump instead of
+reporting it as a regression.  Output directory defaults to the current
 working directory; override with ``REPRO_BENCH_DIR``.
 """
 from __future__ import annotations
@@ -13,6 +19,18 @@ from __future__ import annotations
 import json
 import os
 from datetime import datetime, timezone
+
+
+def _environment() -> dict:
+    try:
+        from repro.serve.aot import environment_fingerprint
+
+        env = dict(environment_fingerprint())
+        env.pop("schema", None)
+        env.pop("flags", None)  # per-program, not per-environment
+        return env
+    except Exception:  # noqa: BLE001 - a bench must never die on metadata
+        return {}
 
 
 def write_bench_json(name: str, metrics, config: dict | None = None,
@@ -24,6 +42,7 @@ def write_bench_json(name: str, metrics, config: dict | None = None,
         "name": name,
         "config": config or {},
         "metrics": metrics,
+        "env": _environment(),
         "timestamp": datetime.now(timezone.utc).isoformat(timespec="seconds"),
     }
     with open(path, "w") as f:

@@ -14,6 +14,7 @@ trajectory is tracked across PRs.  Sections:
   quant  fp32 vs int8/ap_fixed: logit error + packed throughput
   layout shared GraphLayout plan: sort counts + stream latency + recompiles
   multitenant  shared Executor vs N separate engines (warm time, programs)
+  coldstart  AOT cache: cold vs warm-disk restart (subprocess), flag deltas
   roofline  per-(arch x shape x mesh) dry-run roofline terms
 """
 import sys
@@ -22,9 +23,10 @@ import sys
 def main() -> None:
     sections = sys.argv[1:] or [
         "fig9", "table4", "fig8", "fig7", "stream", "slo", "pipeline",
-        "quant", "layout", "multitenant", "roofline"
+        "quant", "layout", "multitenant", "coldstart", "roofline"
     ]
     from benchmarks import (
+        bench_coldstart,
         bench_fig7_latency,
         bench_fig8_large_graph,
         bench_fig9_pipeline,
@@ -50,6 +52,7 @@ def main() -> None:
         "quant": bench_quant,
         "layout": bench_layout,
         "multitenant": bench_multitenant,
+        "coldstart": bench_coldstart,
         "roofline": bench_roofline,
     }
     for s in sections:

@@ -12,8 +12,11 @@ Examples (CPU, reduced configs):
       --n-graphs 64 --qps 8000 --priority 0,0,1 --slo-ms 0:10,1:50
   PYTHONPATH=src python -m repro.launch.serve --models gcn:int8,gat:fp32 \
       --n-graphs 32 --qps 1000 --slo-ms 20
+  PYTHONPATH=src python -m repro.launch.serve --gnn gin --stream \
+      --n-graphs 64 --aot-cache /tmp/aot --prewarm-persist
 """
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -74,6 +77,48 @@ def _priorities(args, n):
     return [cycle[i % len(cycle)] for i in range(n)]
 
 
+def _aot_setup(args):
+    """(aot_cache, xla_flags) from the CLI.
+
+    ``--aot-cache DIR`` turns on the persistent executable cache;
+    ``--xla-flags-file`` points at an explicit flag table (error if
+    absent), otherwise the checked-in ``configs/xla_flags.json`` is used
+    whenever either AOT flag is given (an absent default file is an
+    empty flag set, not an error)."""
+    from repro.serve.aot import AOTCache, XlaFlagConfig
+
+    cache = AOTCache(args.aot_cache) if args.aot_cache else None
+    flags = None
+    if args.xla_flags_file:
+        flags = XlaFlagConfig.load(args.xla_flags_file)
+    elif cache is not None:
+        flags = XlaFlagConfig.load()
+    return cache, flags
+
+
+def _report_cold_start(args, executor, scheduler, graphs, registry,
+                       models=None):
+    """The restart-fast probe: prewarm the bucket ladder (populating the
+    AOT cache on first run, loading from it on the next), then print one
+    machine-parseable line — ``bench_coldstart.py`` and the CI smoke
+    step parse it.  ``cold_start_s`` counts from launcher entry to
+    ladder-warm (serving-ready); interpreter/JAX import time is excluded
+    (orthogonal to the cache — see docs/SERVING.md)."""
+    if not args.aot_cache:
+        return
+    if args.prewarm_persist and scheduler is not None and graphs:
+        scheduler.prewarm_ladders(graphs, models=models)
+    elapsed = time.perf_counter() - args._t0
+    stats = executor.aot_stats()
+    print(f"cold_start_s={elapsed:.3f} aot_hit={stats['hit']} "
+          f"aot_miss={stats['miss']} aot_stale={stats['stale']} "
+          f"lowered={executor.lowered_count}")
+    if registry is not None:
+        from repro.obs.metrics import ServingInstruments
+
+        ServingInstruments(registry).cold_start.set(elapsed)
+
+
 def _telemetry(args):
     """(tracer, registry) for the stream paths.
 
@@ -120,7 +165,8 @@ def serve_gnn_multitenant(args):
     mesh = None
     if args.gnn_mesh > 1:
         mesh = RT.make_flat_mesh(args.gnn_mesh, axis="data")
-    ex = Executor(mesh=mesh)
+    aot_cache, xla_flags = _aot_setup(args)
+    ex = Executor(mesh=mesh, aot_cache=aot_cache, xla_flags=xla_flags)
     specs = []
     for i, spec in enumerate(args.models.split(",")):
         model, _, precision = spec.partition(":")
@@ -140,6 +186,7 @@ def serve_gnn_multitenant(args):
                             metrics=registry, **_slo_kwargs(args))
     graphs = [g[:4] for g in MoleculeStream(MOLHIV, seed=0).take(args.n_graphs)]
     models = [specs[i % len(specs)] for i in range(len(graphs))]
+    _report_cold_start(args, ex, sched, graphs, registry, models=models)
     rep = sched.run(graphs, qps=args.qps, models=models,
                     priorities=_priorities(args, len(graphs)))
     counts = {s: models.count(s) for s in specs}
@@ -172,10 +219,12 @@ def serve_gnn(args):
     if args.precision == "int8-static":
         # calibration stream disjoint from the served one (seed split)
         calib = [g[:4] for g in MoleculeStream(MOLHIV, seed=97).take(16)]
+    aot_cache, xla_flags = _aot_setup(args)
     eng = GNNEngine(cfg, params, mesh=mesh, precision=args.precision,
                     calib_graphs=calib,
                     share_layout=not args.no_share_layout,
-                    fused=args.fused)
+                    fused=args.fused,
+                    aot_cache=aot_cache, xla_flags=xla_flags)
     if eng.quant_report is not None:
         r = eng.quant_report
         print(f"[quant] {args.precision}: {r.quantized} linears quantized, "
@@ -190,6 +239,8 @@ def serve_gnn(args):
             with_eigvec=(args.gnn == "dgn"), tracer=tracer,
             metrics=registry, **_slo_kwargs(args),
         )
+        _report_cold_start(args, eng.executor, sched,
+                           [g[:4] for g in graphs], registry)
         rep = sched.run(graphs, qps=args.qps,
                         priorities=_priorities(args, len(graphs)))
         if rep.num_requests == 0:
@@ -224,9 +275,15 @@ def serve_gnn(args):
     print(f"{args.gnn}: {len(outs)} graphs, mean {np.mean(lats)*1e6:.0f} us/graph "
           f"(p50 {np.percentile(lats,50)*1e6:.0f}, p99 {np.percentile(lats,99)*1e6:.0f}; "
           f"compile {compile_s:.1f}s excluded)")
+    if args.aot_cache:
+        stats = eng.executor.aot_stats()
+        print(f"  aot: hit {stats['hit']} miss {stats['miss']} "
+              f"stale {stats['stale']}; {eng.executor.lowered_count} fresh "
+              f"compiles")
 
 
 def main():
+    t0 = time.perf_counter()  # cold-start epoch: launcher entry
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS)
     ap.add_argument("--gnn", choices=("gcn", "gin", "gin_vn", "gat", "pna", "dgn"))
@@ -297,6 +354,21 @@ def main():
                     help="GNN: disable the shared GraphLayout plan and "
                          "re-sort edges inside every aggregation (the "
                          "pre-layout behaviour; A/B benchmarking only)")
+    ap.add_argument("--aot-cache", default="",
+                    help="GNN: persistent AOT compile-cache directory — "
+                         "serialized executables survive restarts; a warm "
+                         "cache restores the whole bucket ladder without "
+                         "one fresh compile (docs/SERVING.md)")
+    ap.add_argument("--prewarm-persist", action="store_true",
+                    help="GNN stream: warm every (tenant, signature) "
+                         "bucket ladder before serving, populating "
+                         "--aot-cache so the next restart serves in "
+                         "milliseconds")
+    ap.add_argument("--xla-flags-file", default="",
+                    help="explicit XLA flag table (repro-xla-flags/v1 "
+                         "JSON, written by tools/autotune_xla.py); "
+                         "default: the checked-in configs/xla_flags.json "
+                         "when --aot-cache is on")
     ap.add_argument("--precision",
                     choices=("fp32", "int8", "int8-static", "fixed"),
                     default="fp32",
@@ -305,6 +377,7 @@ def main():
                          "(calibrated per-tensor scales); or the paper's "
                          "ap_fixed<W,I> emulation")
     args = ap.parse_args()
+    args._t0 = t0
     if args.models:
         serve_gnn_multitenant(args)
     elif args.gnn:

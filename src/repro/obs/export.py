@@ -241,6 +241,27 @@ def admission_line(registry: MetricsRegistry) -> str:
         ri = shed.labelnames.index("reason")
         for key, v in sorted(shed.series().items()):
             by_reason[key[ri]] = by_reason.get(key[ri], 0) + int(v)
-    return (f"admission: served {total('serve_served_total')}  "
+    line = (f"admission: served {total('serve_served_total')}  "
             f"shed {total('serve_shed_total')} ({by_reason}); "
             f"deadline misses {total('serve_deadline_misses_total')}")
+
+    def seconds(name: str) -> float:
+        inst = registry.get(name)
+        return float(inst.total()) if inst is not None else 0.0
+
+    # the untimed warm-up, split into the half the AOT cache eliminates
+    # (compile) and the half it cannot (first-run warm); omitted entirely
+    # when neither was paid so scripted simulations render unchanged
+    compile_s = seconds("serve_compile_seconds_total")
+    warm_s = seconds("serve_warm_seconds_total")
+    if compile_s or warm_s:
+        line += f"; untimed compile {compile_s:.2f}s + warm {warm_s:.2f}s"
+    aot = registry.get("serve_aot_cache_total")
+    if aot is not None and aot.total():
+        ri = aot.labelnames.index("result")
+        tally = {k: 0 for k in ("hit", "miss", "stale")}
+        for key, v in aot.series().items():
+            tally[key[ri]] = tally.get(key[ri], 0) + int(v)
+        line += (f"; aot hit {tally['hit']} miss {tally['miss']} "
+                 f"stale {tally['stale']}")
+    return line

@@ -78,7 +78,17 @@ CATALOG: Dict[str, Tuple[str, str, Tuple[str, ...]]] = {
     "serve_warms_total": (
         "counter", "Untimed warm executions (new trace signatures)", ()),
     "serve_compile_seconds_total": (
-        "counter", "Seconds spent compiling/warming, outside every timed region", ()),
+        "counter", "Seconds spent in trace+lower+compile (or AOT disk load), "
+        "outside every timed region", ()),
+    "serve_warm_seconds_total": (
+        "counter", "Seconds spent in first-run device warm executions, "
+        "outside every timed region (paid even on an AOT cache hit)", ()),
+    "serve_aot_cache_total": (
+        "counter", "AOT disk-cache lookups, by result (hit|miss|stale)",
+        ("result",)),
+    "serve_cold_start_seconds": (
+        "gauge", "Process restart to first served response (serving-stack "
+        "cost: construct + register + prewarm/AOT-load + first probe)", ()),
     "serve_device_seconds_total": (
         "counter", "Seconds of timed device execution", ()),
     "serve_d2h_seconds_total": (
@@ -323,6 +333,9 @@ class ServingInstruments:
         self.programs_built = registry.counter("serve_programs_built_total")
         self.warms = registry.counter("serve_warms_total")
         self.compile_seconds = registry.counter("serve_compile_seconds_total")
+        self.warm_seconds = registry.counter("serve_warm_seconds_total")
+        self.aot_cache = registry.counter("serve_aot_cache_total")
+        self.cold_start = registry.gauge("serve_cold_start_seconds")
         self.device_seconds = registry.counter("serve_device_seconds_total")
         self.d2h_seconds = registry.counter("serve_d2h_seconds_total")
         self.eigvec_cache = registry.counter("serve_eigvec_cache_total")

@@ -14,8 +14,12 @@ import paths (``repro.sharding``, ``repro.launch.mesh``,
 """
 from repro.runtime import compat, mesh, partitioning
 from repro.runtime.compat import (
+    HAS_SERIALIZE_EXECUTABLE,
+    deserialize_compiled,
+    enable_compilation_cache,
     get_active_mesh,
     make_mesh,
+    serialize_compiled,
     shard_map,
     use_mesh,
 )
@@ -46,8 +50,12 @@ __all__ = [
     "compat",
     "mesh",
     "partitioning",
+    "HAS_SERIALIZE_EXECUTABLE",
+    "deserialize_compiled",
+    "enable_compilation_cache",
     "get_active_mesh",
     "make_mesh",
+    "serialize_compiled",
     "shard_map",
     "use_mesh",
     "flatten_mesh",

@@ -12,6 +12,15 @@ The mesh API has churned across JAX releases:
 Everything in ``repro`` that needs a mesh goes through this module, so the
 same code runs on JAX 0.4.x and newer.  Feature flags are module-level so
 tests can monkeypatch each detection path.
+
+Beyond the mesh surface, this module also probes the **executable
+serialization** API that the persistent AOT compile cache
+(``serve/aot.py``) builds on: ``jax.experimental.serialize_executable``
+round-trips a ``Lowered(...).compile()`` product to bytes and back
+without retracing or recompiling.  Where that API is absent on the
+pinned JAX, :func:`enable_compilation_cache` is the feature-detected
+fallback — it turns on JAX's own on-disk compilation cache, which still
+kills the *compile* half of a restart's warm-up (the trace half stays).
 """
 from __future__ import annotations
 
@@ -28,6 +37,67 @@ HAS_GET_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
 HAS_SET_MESH = hasattr(jax, "set_mesh")
 HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
 HAS_JAX_SHARD_MAP = hasattr(jax, "shard_map")
+
+try:  # executable (AOT) serialization — the serve/aot.py fast path
+    from jax.experimental import serialize_executable as _sx
+
+    HAS_SERIALIZE_EXECUTABLE = (
+        hasattr(_sx, "serialize") and hasattr(_sx, "deserialize_and_load")
+    )
+except ImportError:  # pragma: no cover - depends on pinned jax
+    _sx = None
+    HAS_SERIALIZE_EXECUTABLE = False
+
+
+# ------------------------------------------------- executable serialization
+
+
+def serialize_compiled(compiled) -> tuple:
+    """Serialize one ``jax.stages.Compiled`` to ``(payload_bytes,
+    in_tree, out_tree)`` — everything :func:`deserialize_compiled` needs
+    to rebuild a callable executable in another process.  Raises
+    ``RuntimeError`` when the pinned JAX has no serialization API
+    (callers feature-gate on ``HAS_SERIALIZE_EXECUTABLE``)."""
+    if not HAS_SERIALIZE_EXECUTABLE:
+        raise RuntimeError(
+            "jax.experimental.serialize_executable is unavailable on this "
+            "JAX version; gate on runtime.compat.HAS_SERIALIZE_EXECUTABLE"
+        )
+    return _sx.serialize(compiled)
+
+
+def deserialize_compiled(payload: bytes, in_tree, out_tree):
+    """Rebuild a callable ``Compiled`` from :func:`serialize_compiled`'s
+    triple.  The executable binds to this process's backend: the caller
+    (``serve/aot.py``) is responsible for fingerprinting the environment
+    so a payload is never loaded onto a different jax/jaxlib/backend/
+    topology than it was compiled for."""
+    if not HAS_SERIALIZE_EXECUTABLE:
+        raise RuntimeError(
+            "jax.experimental.serialize_executable is unavailable on this "
+            "JAX version; gate on runtime.compat.HAS_SERIALIZE_EXECUTABLE"
+        )
+    return _sx.deserialize_and_load(payload, in_tree, out_tree)
+
+
+def enable_compilation_cache(path: str) -> bool:
+    """Fallback persistence when executable serialization is absent:
+    point JAX's own on-disk compilation cache at ``path`` (with the
+    min-compile-time/min-entry-size knobs opened so every serving
+    program qualifies).  Returns True when the cache engaged, False when
+    this JAX has no usable compilation-cache config (the caller then
+    runs uncached, exactly as before)."""
+    try:
+        jax.config.update("jax_compilation_cache_dir", path)
+    except Exception:  # noqa: BLE001 - option absent on this version
+        return False
+    for knob, value in (("jax_persistent_cache_min_compile_time_secs", 0.0),
+                        ("jax_persistent_cache_min_entry_size_bytes", 0)):
+        try:
+            jax.config.update(knob, value)
+        except Exception:  # noqa: BLE001 - knob absent; cache still works
+            pass
+    return True
 
 
 # ------------------------------------------------------- mesh construction

@@ -24,7 +24,12 @@ that mode x axis matrix into a pipeline of small stages:
   it may be timed; compilation never leaks into a reported latency.  One
   signature function (:func:`trace_signature`, keyed on every input leaf's
   shape+dtype) covers all modes — the stream mode's old two-field
-  signature missed mid-stream dtype changes.
+  signature missed mid-stream dtype changes.  The warm stage is split in
+  two accounted halves: **compile** (trace + lower + XLA compile — or an
+  AOT disk-cache load, see below) and **warm** (the one untimed device
+  execution), tracked separately as ``compile_seconds`` /
+  ``warm_seconds`` so the AOT cache's effect is measurable — a disk hit
+  eliminates the compile half, never the warm half.
 * **run** — the single timed region in the serving stack.  Durations are
   read through the executor's injected ``serve.clock.Clock`` (default
   ``RealClock``, i.e. ``time.perf_counter``); substituting a stepping
@@ -45,6 +50,21 @@ mistaken for another's.  ``serve.gnn_engine.GNNEngine`` remains the
 single-tenant facade; ``serve.scheduler.StreamScheduler`` routes tagged
 requests to tenants and dispatches packed flushes per tenant.
 
+**AOT persistence.**  With ``aot_cache=`` (a ``serve.aot.AOTCache``),
+every signature's compiled executable is consulted on disk before
+compiling — keyed by ``(program_key, bucket_key, num_graphs, signature)``
+plus the environment fingerprint (jax/jaxlib version, backend, device
+kind, topology, XLA flag set) — and written back on miss, so a restarted
+process deserializes finished machine code instead of retracing and
+recompiling ~10s of programs.  ``xla_flags=`` (a ``serve.aot.
+XlaFlagConfig``, normally the checked-in autotuner table) supplies
+per-(model, bucket) XLA ``compiler_options`` applied at program build;
+the resolved set folds into the fingerprint so retuned flags
+self-invalidate exactly the entries they affect.  When the pinned JAX
+cannot serialize executables, the cache directory instead hosts JAX's
+own compilation cache (``runtime.compat.enable_compilation_cache``) —
+restarts then skip XLA compilation but still pay the retrace.
+
 **Telemetry.**  The executor accepts ``tracer=`` / ``metrics=`` sinks
 (``repro.obs``; the scheduler attaches its own via
 :meth:`Executor.attach_telemetry`) and reports program builds, warm
@@ -59,6 +79,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import warnings
 from collections import OrderedDict
 from typing import Callable, Dict, Optional, Sequence, Set, Tuple
 
@@ -67,6 +88,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import runtime as RT
+from repro.serve.aot import (
+    AOTCache, XlaFlagConfig, environment_fingerprint, model_label,
+)
 from repro.obs.metrics import MetricsRegistry, ServingInstruments
 from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serve.clock import Clock, RealClock
@@ -151,12 +175,24 @@ class _CompiledBucket:
     """Per-program compile-cache record: the jitted program plus
     warm-signature bookkeeping.  ``num_graphs`` is recorded (and part of
     the cache key) — the old engine's ``_bucket(key, num_graphs=...)``
-    silently kept the first call's value on a cache hit."""
+    silently kept the first call's value on a cache hit.
+
+    ``executables`` maps each warmed trace signature to its AOT
+    executable (freshly ``lower().compile()``-d or deserialized from the
+    disk cache); execution dispatches through it, with ``fn`` (the jit
+    wrapper) kept as the lowering source and the fallback path.  The old
+    single ``compile_s`` is split: ``compile_s`` is trace+lower+compile
+    (or disk-load) seconds, ``warm_s`` the first-run device warm —
+    separately visible so the AOT cache's effect (it eliminates only the
+    first half) is measurable."""
 
     fn: Callable
     num_graphs: Optional[int]
     warm: Set[tuple] = dataclasses.field(default_factory=set)
+    executables: Dict[tuple, Callable] = dataclasses.field(default_factory=dict)
     compile_s: float = 0.0
+    warm_s: float = 0.0
+    lowered_count: int = 0  # fresh trace+lower+compiles (0 on pure AOT hits)
 
 
 @dataclasses.dataclass
@@ -204,6 +240,8 @@ class Executor:
         clock: Optional[Clock] = None,
         tracer: Optional[Tracer] = None,
         metrics: Optional[MetricsRegistry] = None,
+        aot_cache: Optional[AOTCache] = None,
+        xla_flags: Optional[XlaFlagConfig] = None,
     ):
         self.buckets = sorted(buckets)
         self.mesh = mesh
@@ -213,6 +251,17 @@ class Executor:
         if rules is None and mesh is not None:
             rules = RT.gnn_rules(mesh)
         self.rules = rules
+        # persistent AOT compile cache + per-program XLA flag table; when
+        # the pinned JAX cannot serialize executables the cache root hosts
+        # JAX's own compilation cache instead (compile skipped on restart,
+        # retrace still paid) — feature-detected, never an error
+        self.aot = aot_cache
+        self.xla_flags = xla_flags
+        self._aot_serialize = aot_cache is not None and RT.HAS_SERIALIZE_EXECUTABLE
+        if aot_cache is not None and not self._aot_serialize:
+            RT.enable_compilation_cache(aot_cache.root)
+        self._env_fp_base: Optional[dict] = None  # lazy (touches devices)
+        self._flags_cache: Dict[tuple, Dict[str, object]] = {}
         self.tenants: Dict[str, Tenant] = {}
         self._compiled: Dict[tuple, _CompiledBucket] = {}
         # host eigvec memo: (edge bytes, n, n_pad) -> computed vector
@@ -305,9 +354,62 @@ class Executor:
 
     @property
     def compile_seconds(self) -> float:
-        """Total compile/warm-up time across all programs (excluded from
-        every reported latency)."""
+        """Total trace+lower+compile (or AOT disk-load) time across all
+        programs — the half of the historical "warm-up" the AOT cache
+        eliminates.  Excluded from every reported latency."""
         return sum(cb.compile_s for cb in self._compiled.values())
+
+    @property
+    def warm_seconds(self) -> float:
+        """Total first-run device-warm time across all programs — the
+        one untimed execution per signature, paid even on an AOT cache
+        hit.  Excluded from every reported latency."""
+        return sum(cb.warm_s for cb in self._compiled.values())
+
+    @property
+    def untimed_seconds(self) -> float:
+        """compile + warm: the historical single "compile_seconds"
+        total (everything excluded from reported latencies)."""
+        return self.compile_seconds + self.warm_seconds
+
+    @property
+    def lowered_count(self) -> int:
+        """Fresh trace+lower+compile constructions across all programs —
+        exactly 0 in a process that served every signature from the AOT
+        disk cache (the restart-safe fast path)."""
+        return sum(cb.lowered_count for cb in self._compiled.values())
+
+    # ------------------------------------------------------ AOT plumbing
+
+    def _fingerprint(self, flags: Dict[str, object]) -> dict:
+        """Environment fingerprint with this program's resolved flag set
+        folded in (base part computed once — it touches jax.devices())."""
+        if self._env_fp_base is None:
+            self._env_fp_base = environment_fingerprint()
+        from repro.serve.aot import flags_hash
+
+        fp = dict(self._env_fp_base)
+        fp["flags"] = flags_hash(flags)
+        return fp
+
+    def _compiler_options(self, tenant: Tenant, bucket_key: tuple) -> dict:
+        """The XLA compiler options for one (model, bucket) program,
+        resolved once and memoized — also the mutation point when a flag
+        set turns out invalid for this backend (we fall back to defaults
+        *and* remember that, so the store-side fingerprint matches what
+        was actually compiled)."""
+        if self.xla_flags is None:
+            return {}
+        key = (model_label(tenant.cfg), bucket_key)
+        flags = self._flags_cache.get(key)
+        if flags is None:
+            flags = self._flags_cache[key] = self.xla_flags.resolve(*key)
+        return flags
+
+    def aot_stats(self) -> Dict[str, int]:
+        """Disk-cache outcome tally (zeros when no cache is attached)."""
+        return dict(self.aot.stats) if self.aot is not None \
+            else {"hit": 0, "miss": 0, "stale": 0}
 
     def _mesh_scope(self):
         """Context under which programs trace/run: installs the executor's
@@ -396,24 +498,81 @@ class Executor:
             )
         return cb
 
-    def _warm(self, cb: _CompiledBucket, sig: tuple, params, p: PreparedBatch) -> float:
-        """Execute once untimed if ``sig`` hasn't run through this program
-        yet (covers compilation for every distinct trace signature, not
-        just the first call).  Returns the time spent warming."""
+    def _compile(self, cb: _CompiledBucket, tenant: Tenant,
+                 p: PreparedBatch, flags: dict) -> Callable:
+        """Fresh trace + lower + XLA compile of one signature's program,
+        with the resolved XLA compiler options applied.  A flag set the
+        backend rejects falls back to a default compile — and the
+        resolved-flags memo is amended so the AOT write-back fingerprint
+        matches what was actually built."""
+        lowered = cb.fn.lower(tenant.params, p.graph, p.eigvec, p.layout)
+        cb.lowered_count += 1
+        if flags:
+            try:
+                return lowered.compile(compiler_options=dict(flags))
+            except Exception as err:  # noqa: BLE001 - backend rejected a flag
+                key = (model_label(tenant.cfg), p.bucket_key)
+                self._flags_cache[key] = {}
+                warnings.warn(
+                    f"XLA flag set for {key} rejected by the backend "
+                    f"({err}); compiled with default options", stacklevel=2
+                )
+        return lowered.compile()
+
+    def _executable(self, cb: _CompiledBucket, sig: tuple, tenant: Tenant,
+                    p: PreparedBatch) -> Callable:
+        """The ready-to-run executable for one signature: the AOT disk
+        cache first (fingerprint-checked; hit/miss/stale accounted), a
+        fresh compile with write-back otherwise."""
+        flags = self._compiler_options(tenant, p.bucket_key)
+        exe = None
+        if self._aot_serialize:
+            key = (repr(tenant.program_key), p.bucket_key, p.num_graphs, sig)
+            exe = self.aot.load(key, self._fingerprint(flags))
+            if self._mi is not None:
+                self._mi.aot_cache.inc(result=self.aot.last_result or "hit")
+            if self.tracer.enabled:
+                self.tracer.event("aot_load", track="executor",
+                                  tenant=tenant.name, bucket=str(p.bucket_key),
+                                  result=self.aot.last_result or "hit")
+        if exe is None:
+            exe = self._compile(cb, tenant, p, flags)
+            if self._aot_serialize:
+                # store under the *effective* flags (compile may have
+                # fallen back to defaults and amended the memo)
+                fp = self._fingerprint(self._compiler_options(tenant, p.bucket_key))
+                self.aot.store(key, fp, exe)
+        return exe
+
+    def _warm(self, cb: _CompiledBucket, sig: tuple, tenant: Tenant,
+              p: PreparedBatch) -> float:
+        """Make ``sig`` servable through this program: build (or load
+        from the AOT cache) its executable, then execute once untimed —
+        so neither compilation nor first-run warm can ever leak into a
+        reported latency.  The two halves are accounted separately
+        (``compile_s`` / ``warm_s``); returns total seconds spent (0.0
+        when already warm)."""
         if sig in cb.warm:
             return 0.0
         t0 = self.clock.now()
-        jax.block_until_ready(cb.fn(params, p.graph, p.eigvec, p.layout))
-        dt = self.clock.now() - t0
+        exe = self._executable(cb, sig, tenant, p)
+        cb.executables[sig] = exe
+        compile_dt = self.clock.now() - t0
+        t1 = self.clock.now()
+        jax.block_until_ready(exe(tenant.params, p.graph, p.eigvec, p.layout))
+        warm_dt = self.clock.now() - t1
         cb.warm.add(sig)
-        cb.compile_s += dt
+        cb.compile_s += compile_dt
+        cb.warm_s += warm_dt
         if self._mi is not None:
             self._mi.warms.inc()
-            self._mi.compile_seconds.inc(dt)
+            self._mi.compile_seconds.inc(compile_dt)
+            self._mi.warm_seconds.inc(warm_dt)
         if self.tracer.enabled:
             self.tracer.event("warm", track="executor",
-                              bucket=str(p.bucket_key), dur_s=dt)
-        return dt
+                              bucket=str(p.bucket_key), dur_s=warm_dt,
+                              compile_s=compile_dt)
+        return compile_dt + warm_dt
 
     # ---------------------------------------------------------- prepare
 
@@ -512,10 +671,14 @@ class Executor:
         the *caller's* responsibility (``serve/pipeline.py`` bounds it)."""
         tenant = self.tenant(model)
         cb = self._program(tenant, p.bucket_key, p.num_graphs)
+        sig = (tenant.params_sig,) + p.signature
         with self._mesh_scope():
-            self._warm(cb, (tenant.params_sig,) + p.signature, tenant.params, p)
+            self._warm(cb, sig, tenant, p)
+            # dispatch through the signature's AOT executable (fresh or
+            # deserialized); cb.fn remains the lowering source/fallback
+            fn = cb.executables.get(sig, cb.fn)
             t0 = self.clock.now()
-            out = cb.fn(tenant.params, p.graph, p.eigvec, p.layout)
+            out = fn(tenant.params, p.graph, p.eigvec, p.layout)
         return PendingRun(self, out, tenant, p, t0)
 
     def run(self, p: PreparedBatch,
@@ -536,7 +699,7 @@ class Executor:
         cb = self._program(tenant, p.bucket_key, p.num_graphs)
         with self._mesh_scope():
             return self._warm(cb, (tenant.params_sig,) + p.signature,
-                              tenant.params, p)
+                              tenant, p)
 
     # ------------------------------------------------------------- misc
 

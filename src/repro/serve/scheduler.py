@@ -63,8 +63,8 @@ tenant program, governed by ``prewarm``:
     rung compiles untimed the first time its signature appears, so a live
     stream never recompiles after warmup no matter how load fluctuates.
   * ``"lazy"`` (multi-tenant default): a rung warms — still strictly
-    outside the timed region, tracked in ``compile_seconds`` — on its
-    first flush.
+    outside the timed region, tracked in ``compile_seconds`` +
+    ``warm_seconds`` — on its first flush.
 
 Every flush carries its pack-time payload: ``_execute`` calls
 ``core.batching.pack_prepared``, which emits the padded graph, the packed
@@ -204,7 +204,7 @@ class StreamReport:
     latencies_s: np.ndarray  # (n_offered,) completion - arrival; nan if shed
     outputs: List[Optional[np.ndarray]]  # rid order; None for shed requests
     makespan_s: float  # virtual time from first arrival to last completion
-    compile_s: float  # warm/compile time (excluded from latencies)
+    compile_s: float  # untimed compile + first-run warm (excluded from latencies)
     shed: List[Shed] = dataclasses.field(default_factory=list)
     flush_log: List[FlushRecord] = dataclasses.field(default_factory=list)
 
@@ -660,6 +660,32 @@ class StreamScheduler:
             )
             self.executor.warm(prep, model=model)
 
+    def prewarm_ladders(self, graphs: Sequence[tuple],
+                        models: Optional[Sequence[Optional[str]]] = None) -> int:
+        """Warm the full bucket ladder for each representative graph,
+        regardless of the prewarm mode — the restart-fast entry point.
+
+        When the executor carries an AOT cache every warm either loads
+        from disk (milliseconds) or compiles and writes back, so one call
+        per tenant with a typical graph populates the whole ladder on
+        disk and a restarted server serves its first request without a
+        single fresh compile.  Idempotent: already-warm rungs are
+        skipped.  Returns the number of (tenant, signature) ladders
+        touched."""
+        if models is None:
+            models = [None] * len(graphs)
+        seen = set()
+        for g, model in zip(graphs, models):
+            req = Request(rid=-1, graph=tuple(g)[:4], arrival_s=0.0,
+                          model=model)
+            key, ladder = self.ladder_for(req)
+            if key in seen:
+                continue
+            seen.add(key)
+            if self.prewarm != "eager":  # ladder_for already warmed eager
+                self._warm_ladder(ladder, req)
+        return len(seen)
+
     # -------------------------------------------------------------- serving
 
     def run(self, graphs: Sequence[tuple], qps: float = 0.0,
@@ -719,7 +745,7 @@ class StreamScheduler:
                 priority=priority,
                 slo_s=self.resolve_slo_s(model, priority),
             ))
-        compile_before = self.executor.compile_seconds
+        compile_before = self.executor.untimed_seconds
         tr = self.tracer
         if tr.enabled:
             # span timestamps must share the run's timeline (the tracer
@@ -896,7 +922,7 @@ class StreamScheduler:
             outputs=outputs,
             makespan_s=max(last_done_s - (requests[0].arrival_s if requests else t0),
                            1e-12),
-            compile_s=self.executor.compile_seconds - compile_before,
+            compile_s=self.executor.untimed_seconds - compile_before,
             shed=shed_list,
             flush_log=flush_log,
         )
@@ -1227,7 +1253,7 @@ class StreamScheduler:
             outputs=outputs,
             makespan_s=max(last_done_s - (requests[0].arrival_s if requests else t0),
                            1e-12),
-            compile_s=self.executor.compile_seconds - compile_before,
+            compile_s=self.executor.untimed_seconds - compile_before,
             shed=shed_list,
             flush_log=flush_log,
         )

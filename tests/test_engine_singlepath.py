@@ -210,6 +210,54 @@ def test_obs_package_is_walked_with_full_rules(tmp_path):
     assert cesp.check_module(bad) != []
 
 
+def test_guard_flags_rogue_executable_serialization(tmp_path):
+    """Every import/reference form of jax.experimental.serialize_executable
+    outside serve/aot.py and the executor is a second persistence path
+    and must fail; the exemption clears exactly those errors."""
+    bad = tmp_path / "rogue_persist.py"
+    bad.write_text(
+        "import jax\n"
+        "import jax.experimental.serialize_executable\n"
+        "from jax.experimental import serialize_executable\n"
+        "from jax.experimental.serialize_executable import serialize\n"
+        "from jax.experimental.serialize_executable import "
+        "deserialize_and_load as undump\n"
+        "def persist(compiled):\n"
+        "    a = jax.experimental.serialize_executable.serialize(compiled)\n"
+        "    b = serialize(compiled)\n"
+        "    return a, b, undump\n"
+    )
+    errors = cesp.check_module(bad)
+    assert len(errors) >= 6, errors
+    assert any("persistence surface" in e for e in errors)
+    assert any("executable serialization" in e for e in errors)
+    assert cesp.check_module(bad, allow_serialize=True) == []
+    # allow_serialize grants nothing beyond serialization
+    sneaky = tmp_path / "sneaky_persist.py"
+    sneaky.write_text(
+        "import time, jax\n"
+        "from jax.experimental.serialize_executable import serialize\n"
+        "def dump(fn):\n"
+        "    return serialize(jax.jit(fn)), time.perf_counter()\n"
+    )
+    errors = cesp.check_module(sneaky, allow_serialize=True)
+    assert len(errors) == 2, errors
+
+
+def test_aot_module_is_compile_and_serialize_exempt_only():
+    """serve/aot.py joins the walk with compile+serialize allowances but
+    stays timing- and threading-checked; the exemption sets stay
+    one-sided."""
+    walked = {p.name for p in cesp.SERVE.glob("*.py")}
+    assert "aot.py" in walked
+    assert cesp.check_module(cesp.SERVE / "aot.py", allow_compile=True,
+                             allow_serialize=True) == []
+    assert "aot.py" in cesp.COMPILE_EXEMPT
+    assert "aot.py" not in cesp.TIMING_EXEMPT
+    assert "aot.py" not in cesp.THREADING_EXEMPT
+    assert cesp.SERIALIZE_EXEMPT == {"aot.py", "executor.py"}
+
+
 def test_guard_runs_as_script():
     r = subprocess.run(
         [sys.executable, "tools/check_engine_singlepath.py"],

@@ -14,7 +14,7 @@ import pytest
 
 from conftest import scripted_executor
 from repro.obs import MetricsRegistry, Tracer, export
-from repro.obs.metrics import default_registry
+from repro.obs.metrics import ServingInstruments, default_registry
 from repro.serve.clock import VirtualClock
 from repro.serve.scheduler import StreamScheduler
 
@@ -151,6 +151,22 @@ def test_shed_and_miss_events_reach_tracer_registry_and_ledger():
     assert reg.get("serve_deadline_misses_total").value(**lab) == 1
     assert export.admission_line(reg) == (
         "admission: served 1  shed 2 ({'queue_full': 2}); deadline misses 1"
+    )
+
+
+def test_admission_line_renders_compile_warm_split_and_aot_tally():
+    """Once the executor has paid untimed work, the ledger shows the
+    compile/warm split and the AOT cache outcome tally."""
+    reg = MetricsRegistry()
+    mi = ServingInstruments(reg)
+    mi.served.inc(1, tenant="default", priority="0")
+    mi.compile_seconds.inc(1.25)
+    mi.warm_seconds.inc(0.5)
+    mi.aot_cache.inc(2, result="hit")
+    mi.aot_cache.inc(1, result="miss")
+    assert export.admission_line(reg) == (
+        "admission: served 1  shed 0 ({}); deadline misses 0; "
+        "untimed compile 1.25s + warm 0.50s; aot hit 2 miss 1 stale 0"
     )
 
 

@@ -31,7 +31,21 @@ outside the sanctioned files.  Exemptions:
     separate serving stack with its own jitted prefill/decode programs,
     but its wall-time reads go through the injected ``Clock`` like
     everyone else's (it is still checked for timing references — the
-    guard hole it used to enjoy is closed).
+    guard hole it used to enjoy is closed);
+  * ``serve/aot.py`` — compile only: the persistent AOT cache
+    deserializes finished executables (program construction by another
+    name), and is — with the executor — the only serving module allowed
+    near the lowering/serialization APIs.
+
+Since the AOT cache landed, a fourth rule rides the walk: **executable
+serialization is single-path**.  Any reference to
+``jax.experimental.serialize_executable`` (module import, from-import of
+``serialize`` / ``deserialize_and_load``, or attribute access through a
+jax alias) outside ``serve/aot.py`` and ``serve/executor.py`` fails —
+a module that serializes executables is a module that can quietly grow a
+second persistence format with its own (unfingerprinted) invalidation
+story.  The real calls live behind ``runtime/compat.py``'s
+feature-detection; the serve/obs walk keeps everyone else out.
 
 Since the pipelined execution mode landed, a third rule rides the same
 walk: **threading is single-path too**.  Any import of ``threading`` /
@@ -65,14 +79,23 @@ SERVE = ROOT / "src" / "repro" / "serve"
 OBS = ROOT / "src" / "repro" / "obs"
 ALLOWED = "executor.py"  # the one timing/compile path
 TIMING_EXEMPT = {"clock.py"}  # the Clock interface: timing yes, compile no
-COMPILE_EXEMPT = {"engine.py"}  # the LM server: its own jit pair, no timing
+# engine.py: the LM server's own jit pair; aot.py: executable
+# (de)serialization is program construction by another name
+COMPILE_EXEMPT = {"engine.py", "aot.py"}
 THREADING_EXEMPT = {"pipeline.py"}  # the one sanctioned threading surface
+SERIALIZE_EXEMPT = {"aot.py", "executor.py"}  # the one persistence surface
 TIMING_ATTRS = {"perf_counter", "monotonic", "time"}  # of the time module
 TIMING_NAMES = {"perf_counter", "monotonic", "time"}  # `from time import ...`
 COMPILE_ATTRS = {"jit", "pjit"}  # of the jax module chain
 COMPILE_NAMES = {"jit", "pjit"}  # bare `from jax import jit`
 TIMING_MODULES = {"time"}
 COMPILE_MODULES = {"jax", "jax.experimental.pjit"}
+# executable-serialization surface: importing the module (any form) or
+# reaching it through a jax alias is how a second persistence path
+# starts, so the reference itself is the violation
+SERIALIZE_MODULE = "jax.experimental.serialize_executable"
+SERIALIZE_ATTRS = {"serialize_executable"}  # of the jax module chain
+SERIALIZE_NAMES = {"serialize", "deserialize_and_load"}
 # any import of these module trees is a threading violation: you cannot
 # spawn a worker without importing one of them, so banning the import
 # (every form: plain, aliased, from-import, submodule) suffices
@@ -101,10 +124,29 @@ def _bound_names(tree: ast.AST):
                 if alias.name.split(".")[0] == "jax":
                     jax_mods.add(bound)
         elif isinstance(node, ast.ImportFrom):
-            if node.module in TIMING_MODULES | COMPILE_MODULES:
+            if node.module in TIMING_MODULES | COMPILE_MODULES | {SERIALIZE_MODULE}:
                 for alias in node.names:
                     names[alias.asname or alias.name] = alias.name
     return time_mods, jax_mods, names
+
+
+def _serialize_import(node: ast.AST):
+    """The offending path when a node imports the executable-serialization
+    module in any form (plain, aliased, or ``from jax.experimental
+    import serialize_executable``)."""
+    if isinstance(node, ast.Import):
+        for alias in node.names:
+            if alias.name == SERIALIZE_MODULE or \
+                    alias.name.startswith(SERIALIZE_MODULE + "."):
+                return alias.name
+    elif isinstance(node, ast.ImportFrom) and node.module is not None:
+        if node.module == SERIALIZE_MODULE or \
+                node.module.startswith(SERIALIZE_MODULE + "."):
+            return node.module
+        for alias in node.names:
+            if f"{node.module}.{alias.name}" == SERIALIZE_MODULE:
+                return SERIALIZE_MODULE
+    return None
 
 
 def _threading_import(node: ast.AST):
@@ -122,14 +164,17 @@ def _threading_import(node: ast.AST):
 
 def check_module(path: Path, allow_timing: bool = False,
                  allow_compile: bool = False,
-                 allow_threading: bool = False) -> list[str]:
+                 allow_threading: bool = False,
+                 allow_serialize: bool = False) -> list[str]:
     """All violations in one module.  ``allow_timing`` skips the timing
     rules (for ``serve/clock.py``, which wraps the real clock) but never
     the compile rules; ``allow_compile`` is the inverse (for
     ``serve/engine.py``, whose prefill/decode jit pair is its own
     sanctioned surface) and never skips the timing rules;
     ``allow_threading`` skips the worker-thread import ban (for
-    ``serve/pipeline.py`` only) and skips nothing else."""
+    ``serve/pipeline.py`` only); ``allow_serialize`` skips the
+    executable-serialization ban (for ``serve/aot.py`` and the
+    executor) — each allowance skips nothing else."""
     try:
         rel = path.relative_to(ROOT)
     except ValueError:  # e.g. a tmp file under test
@@ -150,23 +195,39 @@ def check_module(path: Path, allow_timing: bool = False,
                 f"is the one sanctioned threading surface"
             )
             continue
+        mod = _serialize_import(node)
+        if mod is not None and not allow_serialize:
+            errors.append(
+                f"{rel}:{node.lineno}: import of {mod} outside "
+                f"serve/aot.py — the AOT cache is the one executable-"
+                f"persistence surface"
+            )
+            continue
         if isinstance(node, ast.Attribute):
             root = _attr_root(node)
             if node.attr in TIMING_ATTRS and root in time_mods:
                 bad, hint = f"time.{node.attr} timing", "timing"
             elif node.attr in COMPILE_ATTRS and root in jax_mods:
                 bad, hint = f"jax.{node.attr} program construction", "compile"
+            elif node.attr in SERIALIZE_ATTRS and root in jax_mods:
+                bad, hint = (f"jax...{node.attr} executable serialization",
+                             "serialize")
         elif isinstance(node, ast.Name):
             origin = from_names.get(node.id)
             if origin in TIMING_NAMES:
                 bad, hint = f"{origin} timing", "timing"
             elif origin in COMPILE_NAMES:
                 bad, hint = f"{origin} program construction", "compile"
+            elif origin in SERIALIZE_NAMES:
+                bad, hint = f"{origin} executable serialization", "serialize"
         if bad is None or (hint == "timing" and allow_timing) \
-                or (hint == "compile" and allow_compile):
+                or (hint == "compile" and allow_compile) \
+                or (hint == "serialize" and allow_serialize):
             continue
         fix = ("route timestamps through an injected serve/clock.py Clock"
                if hint == "timing"
+               else "persist executables through serve/aot.py's AOTCache"
+               if hint == "serialize"
                else "route through the Executor's warm/run pipeline instead")
         errors.append(
             f"{rel}:{node.lineno}: {bad} outside serve/executor.py — {fix}"
@@ -187,6 +248,7 @@ def main() -> int:
             allow_timing=sanctioned or path.name in TIMING_EXEMPT,
             allow_compile=sanctioned or path.name in COMPILE_EXEMPT,
             allow_threading=path.name in THREADING_EXEMPT,
+            allow_serialize=path.name in SERIALIZE_EXEMPT,
         ))
     for path in sorted(OBS.glob("*.py")):
         checked += 1
